@@ -1,0 +1,51 @@
+"""Planner quality: fraction of state bytes that actually crosses the
+network under the intersection plan, per transition class — the
+``move_fraction`` input to the simulator's LiveR model and the quantity
+behind the paper's 'minimal peer-to-peer transfer plan' claim.
+
+Compares source-selection policies: "first" (paper-faithful arbitrary
+replica) vs "nearest" (beyond-paper zero-copy-aware)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Timed, emit
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig
+from repro.core.intersection import plan_transfer
+from repro.core.resource_view import build_tensor_specs, total_state_bytes
+
+TRANSITIONS = [
+    ("tp_grow", ParallelConfig(dp=2, tp=4), ParallelConfig(dp=2, tp=8)),
+    ("dp_grow", ParallelConfig(dp=2, tp=4), ParallelConfig(dp=4, tp=4)),
+    ("dp_shrink", ParallelConfig(dp=4, tp=4), ParallelConfig(dp=2, tp=4)),
+    ("pp_to_tp", ParallelConfig(dp=2, pp=2, tp=2), ParallelConfig(dp=2, pp=1, tp=4)),
+    ("mixed_3d", ParallelConfig(dp=2, pp=2, tp=2), ParallelConfig(dp=1, pp=4, tp=2)),
+]
+
+
+def main() -> None:
+    cfg = get_config("qwen3-1.7b")  # full 2B-param logical structure
+    specs = build_tensor_specs(cfg, include_optimizer=True)
+    total = total_state_bytes(specs)
+    for name, ca, cb in TRANSITIONS:
+        with Timed() as t:
+            near = plan_transfer(specs, ca, cb, source_policy="nearest",
+                                 layer_granular=False)
+            first = plan_transfer(specs, ca, cb, source_policy="first",
+                                  layer_granular=False)
+        frac_near = near.network_bytes / total
+        frac_first = first.network_bytes / total
+        tx_first, _ = first.per_rank_bytes()
+        tx_near, _ = near.per_rank_bytes()
+        fan_first = max(tx_first.values()) if tx_first else 0
+        fan_near = max(tx_near.values()) if tx_near else 0
+        emit(
+            f"movefrac/{name}", t.us,
+            f"nearest={frac_near:.3f};paper_first={frac_first:.3f};"
+            f"max_src_fanout_bytes nearest={fan_near/1e9:.2f}GB "
+            f"first={fan_first/1e9:.2f}GB",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Fig. 6a: end-to-end reconfiguration downtime across model sizes —
+LiveR vs Megatron-LM Checkpoint vs UCP (14x-23x speedup band)."""
+
+from __future__ import annotations
+
+from benchmarks.common import Timed, emit
+from repro.sim.cluster import PAPER_TESTBED
+from repro.sim.liver_sim import SystemKind, reconfig_downtime
+
+SIZES = [("gpt-1.7b", 1.7e9), ("gpt-7b", 7e9), ("gpt-14b", 14e9),
+         ("gpt-20b", 20e9), ("gpt-30b", 30e9)]
+
+
+def main() -> None:
+    for name, params in SIZES:
+        with Timed() as t:
+            mk = reconfig_downtime(SystemKind.MEGATRON_CKPT, PAPER_TESTBED, params, 32, 32)
+            ucp = reconfig_downtime(SystemKind.UCP, PAPER_TESTBED, params, 32, 32)
+            lv = reconfig_downtime(SystemKind.LIVER, PAPER_TESTBED, params, 32, 32)
+        emit(
+            f"fig6a/{name}", t.us,
+            f"megatron={mk.total:.1f}s;ucp={ucp.total:.1f}s;liver={lv.total:.2f}s;"
+            f"speedup={mk.total/lv.total:.1f}x (paper band 14-23x; liver 2-6s)",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Roofline deliverable (g): the per-(arch x shape x mesh) table from the
+dry-run artifacts in results/dryrun/ — three terms, dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs ratio, roofline fraction."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS, emit
+
+
+def load_all(out_dir=None):
+    out_dir = out_dir or os.path.join(RESULTS, "dryrun")
+    rows = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def main() -> None:
+    rows = load_all()
+    if not rows:
+        emit("roofline/missing", 0.0, "run: python -m repro.launch.dryrun --sweep")
+        return
+    ok = [r for r in rows if r.get("status") == "ok"]
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    errors = [r for r in rows if r.get("status") == "error"]
+    emit(
+        "roofline/cells", 0.0,
+        f"ok={len(ok)};skipped={len(skipped)};errors={len(errors)}",
+    )
+    for r in sorted(ok, key=lambda r: (r["mesh"], r["arch"], r["shape"])):
+        emit(
+            f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}",
+            r.get("compile_s", 0.0) * 1e6,
+            f"compute={r['compute_s']:.3g}s;memory={r['memory_s']:.3g}s;"
+            f"collective={r['collective_s']:.3g}s;bottleneck={r['bottleneck']};"
+            f"useful={r['useful_flops_ratio']:.3f};"
+            f"roofline_frac={r['roofline_fraction']:.4f}",
+        )
+    for r in skipped:
+        emit(
+            f"roofline/{r['mesh']}/{r['arch']}/{r['shape']}", 0.0,
+            f"SKIPPED: {r['reason']}",
+        )
+
+
+if __name__ == "__main__":
+    main()

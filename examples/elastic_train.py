@@ -1,0 +1,97 @@
+"""End-to-end elastic training driver: a ~100M-parameter model trained for a
+few hundred steps with TWO live reconfigurations and one fail-stop fallback
+injected mid-run — the full LiveR lifecycle on host devices.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python examples/elastic_train.py [--steps 200]
+
+Watch for:
+  * [event]/[switch] lines — training continues while the shadow world
+    prepares; the pause at the switch is milliseconds;
+  * goodput printed at the end (≈99%+);
+  * the loss curve crossing reconfigurations without a blip (paper Fig. 9).
+"""
+
+import argparse
+import dataclasses
+import os
+import sys
+import tempfile
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig
+from repro.core.controller import LiveRController
+from repro.optim import AdamWConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    args = ap.parse_args()
+
+    # ~100M params: qwen3 geometry at width 512
+    cfg = dataclasses.replace(
+        get_config("qwen3-1.7b"),
+        name="qwen3-100m",
+        num_layers=8,
+        d_model=512,
+        num_heads=8,
+        num_kv_heads=4,
+        d_ff=2048,
+        vocab_size=32000,
+        dtype="float32",
+    )
+    from repro.models.model import analytic_param_count
+
+    print(f"model: {cfg.name} ({analytic_param_count(cfg)/1e6:.0f}M params)")
+
+    ckpt_dir = tempfile.mkdtemp(prefix="liver_ckpt_")
+    opt = AdamWConfig(learning_rate=6e-4, warmup_steps=20, total_steps=args.steps)
+    ctrl = LiveRController(
+        cfg,
+        ParallelConfig(dp=2, tp=2),
+        opt,
+        seq_len=128,
+        global_batch=8,
+        ckpt_dir=ckpt_dir,
+        ckpt_interval=40,
+    )
+
+    schedule = {
+        args.steps // 4: ("resize", ParallelConfig(dp=2, tp=4)),  # scale out
+        args.steps // 2: ("resize", ParallelConfig(dp=1, tp=4)),  # scale in
+        3 * args.steps // 4: ("failstop", ParallelConfig(dp=2, tp=2)),
+    }
+    losses = []
+    while ctrl.step < args.steps:
+        ev = schedule.pop(ctrl.step, None)
+        if ev:
+            kind, target = ev
+            if kind == "resize":
+                print(f"[event] step {ctrl.step}: live resize -> {target.describe()}")
+                ctrl.request_resize(target)
+            else:
+                print(f"[event] step {ctrl.step}: fail-stop! falling back to checkpoint")
+                rec = ctrl.fail_stop_recover(target)
+                print(f"        recovered to step {ctrl.step} in {rec.total_pause_s:.1f}s")
+        n_before = len(ctrl.records)
+        losses += ctrl.train_steps(1)
+        if len(ctrl.records) > n_before and ctrl.records[-1].mode == "live":
+            r = ctrl.records[-1]
+            print(f"[switch] {r.src} -> {r.dst}: pause {r.total_pause_s*1e3:.0f}ms "
+                  f"(prepare {r.prepare_s:.1f}s fully overlapped)")
+        if ctrl.step % 20 == 0:
+            print(f"  step {ctrl.step:4d} loss={losses[-1]:.4f} "
+                  f"world={ctrl.world.parallel.describe()}")
+
+    print(f"\nfinal loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+    print(f"goodput {ctrl.ledger.goodput*100:.2f}%  "
+          f"total pause {ctrl.ledger.pause_seconds:.2f}s  "
+          f"events: {[r.mode for r in ctrl.records]}")
+
+
+if __name__ == "__main__":
+    main()

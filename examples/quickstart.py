@@ -1,0 +1,34 @@
+"""Quickstart: train a tiny LM for 40 steps on CPU, watch the loss drop.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig
+from repro.data import SyntheticLM
+from repro.distribution.sharding import make_elastic_mesh
+from repro.distribution.step import init_train_state, jit_train_step
+from repro.optim import AdamWConfig
+
+
+def main():
+    cfg = get_config("qwen3-1.7b").reduced()
+    mesh = make_elastic_mesh(ParallelConfig())  # single device
+    params, opt_state = init_train_state(cfg, mesh)
+    opt = AdamWConfig(learning_rate=3e-3, warmup_steps=10, total_steps=40)
+    step, _ = jit_train_step(cfg, mesh, opt, global_batch=8)
+    data = SyntheticLM(cfg.vocab_size, seq_len=64, global_batch=8, seed=0)
+
+    for i in range(40):
+        batch = {"tokens": jnp.asarray(data.global_batch_at(i))}
+        params, opt_state, metrics = step(params, opt_state, batch)
+        if i % 5 == 0:
+            print(f"step {i:3d}  loss={float(metrics['loss']):.4f}  "
+                  f"lr={float(metrics['lr']):.2e}")
+    print("done — loss should have dropped by >0.5 nats")
+
+
+if __name__ == "__main__":
+    main()

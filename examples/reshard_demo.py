@@ -1,0 +1,69 @@
+"""Intersection-planner walkthrough: visualize the transfer plan for the
+paper's Fig. 5 scenario (TP=4 -> TP=8) and for a mixed 3D reshape, then
+execute it through the bounded staging buffer and verify bit-exactness.
+
+    PYTHONPATH=src python examples/reshard_demo.py
+"""
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig
+from repro.core.intersection import plan_transfer, verify_completeness
+from repro.core.resource_view import TensorSpec, build_tensor_specs
+from repro.core.streaming import (
+    allocate_destination,
+    execute_plan,
+    materialize_rank,
+)
+from repro.models.transformer import block_program
+
+
+def fig5_tp4_to_tp8():
+    print("=== paper Fig. 5: weight W[:, :] under TP=4 -> TP=8 ===")
+    spec = TensorSpec("params/w", (8, 64), "float32", ("none", "tp"), "stages", "params")
+    plan = plan_transfer([spec], ParallelConfig(tp=4), ParallelConfig(tp=8))
+    for t in sorted(plan.tasks, key=lambda t: t.dst_rank):
+        cols = t.bounds[1]
+        print(f"  src rank {t.src_rank} -> dst rank {t.dst_rank}: "
+              f"cols [{cols[0]:2d},{cols[1]:2d})  ({t.nbytes} B)")
+    print(f"  total: {len(plan.tasks)} tasks, {plan.network_bytes} network bytes, "
+          f"no full-tensor materialization\n")
+
+
+def mixed_3d_reshape():
+    print("=== mixed 3D reshape of a real model's state "
+          "(qwen3 reduced, params+optimizer) ===")
+    cfg = get_config("qwen3-1.7b").reduced()
+    specs = build_tensor_specs(cfg, include_optimizer=True)
+    ca, cb = ParallelConfig(dp=2, pp=2, tp=2), ParallelConfig(dp=1, pp=1, tp=4)
+    plan = plan_transfer(specs, ca, cb, num_positions=len(block_program(cfg)))
+    verify_completeness(specs, plan, cb)
+    tx, rx = plan.per_rank_bytes()
+    print(f"  {ca.describe()} ({ca.world_size} ranks) -> "
+          f"{cb.describe()} ({cb.world_size} ranks)")
+    print(f"  tensors: {len(specs)}, tasks: {len(plan.tasks)}, "
+          f"layers streamed: {len(plan.layers())}")
+    print(f"  network bytes: {plan.network_bytes:,}  "
+          f"zero-copy (local) bytes: {plan.local_bytes:,}")
+    print(f"  per-dst-rank receive bytes: { {k: f'{v:,}' for k, v in sorted(rx.items())} }")
+
+    rng = np.random.default_rng(0)
+    g = {s.name: rng.normal(size=s.shape).astype(s.dtype) for s in specs}
+    src = {r: materialize_rank(specs, ca, r, g) for r in range(ca.world_size)}
+    dst = {r: allocate_destination(specs, cb, r) for r in range(cb.world_size)}
+    budget = 256 * 1024
+    stats = execute_plan(plan, src, dst, staging_bytes=budget)
+    stats.assert_bounded(budget)
+    for r in range(cb.world_size):
+        ref = materialize_rank(specs, cb, r, g)
+        for name, arr in ref.shards.items():
+            np.testing.assert_array_equal(arr, dst[r].shards[name])
+    print(f"  executed: {stats.layers_streamed} layer barriers, "
+          f"peak staging {stats.peak_staging_bytes:,} B <= budget {budget:,} B, "
+          "bit-exact ✓")
+
+
+if __name__ == "__main__":
+    fig5_tp4_to_tp8()
+    mixed_3d_reshape()

@@ -1,0 +1,4 @@
+"""repro: a JAX reproduction + extension of LiveR (live reconfiguration for
+elastic model training). See DESIGN.md for the system inventory."""
+
+__version__ = "1.0.0"

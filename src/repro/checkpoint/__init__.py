@@ -1,0 +1,8 @@
+from repro.checkpoint.ckpt import (
+    save_checkpoint,
+    load_checkpoint,
+    AsyncCheckpointer,
+    latest_step,
+)
+
+__all__ = ["save_checkpoint", "load_checkpoint", "AsyncCheckpointer", "latest_step"]

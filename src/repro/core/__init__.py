@@ -1,0 +1,25 @@
+"""LiveR core: the paper's contribution.
+
+  resource_view  — Abstract Resource View (logical tensors + view functions)
+  intersection   — geometric intersection transfer planner (App. A.2)
+  streaming      — Algorithm 1 bounded-memory layer-streaming executor
+  reshard        — live-path resharder over jax.Arrays
+  generations    — Stable/Prepare/Ready/Switch/Cleanup state machine
+  mock_groups    — abstract-mesh warmup (mock process groups)
+  shadow         — background Shadow World construction
+  controller     — end-to-end LiveR controller + fail-stop fallback
+  events         — elasticity event types
+  downtime       — goodput/downtime accounting
+"""
+
+from repro.core.resource_view import TensorSpec, View, build_tensor_specs, view_of
+from repro.core.intersection import TransferPlan, TransferTask, plan_transfer, verify_completeness
+from repro.core.streaming import execute_plan, materialize_rank, allocate_destination
+from repro.core.generations import GenerationMachine, GenState
+
+__all__ = [
+    "TensorSpec", "View", "build_tensor_specs", "view_of",
+    "TransferPlan", "TransferTask", "plan_transfer", "verify_completeness",
+    "execute_plan", "materialize_rank", "allocate_destination",
+    "GenerationMachine", "GenState",
+]

@@ -1,0 +1,306 @@
+"""LiveR controller (paper §4.3 end-to-end workflow, §4.7 switch).
+
+Orchestrates the full reconfiguration lifecycle on live JAX state:
+
+  trigger → Prepare (shadow thread: mesh + AOT compile)  [overlapped, I1]
+          → Ready   (await iteration boundary)           [deterministic, I3]
+          → Switch  (drain → live reshard → pointer swap) [the only pause]
+          → Cleanup (free old world asynchronously)
+          → Stable
+
+plus the fail-stop fallback to durable checkpoints (invariant I4) and the
+stop-and-restart / checkpoint-reshape (UCP) baselines used by the
+benchmarks.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, load_checkpoint, save_checkpoint
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core.downtime import GoodputLedger
+from repro.core.generations import GenerationMachine, GenState
+from repro.core.reshard import DEFAULT_STAGING_BYTES, live_reshard
+from repro.core.shadow import ShadowBuilder, WorldHandle, build_train_world
+from repro.data import SyntheticLM
+from repro.optim import AdamWConfig
+
+
+@dataclass
+class ReconfigRecord:
+    gen_id: int
+    src: str
+    dst: str
+    prepare_s: float = 0.0
+    drain_s: float = 0.0
+    transfer_s: float = 0.0
+    switch_s: float = 0.0
+    total_pause_s: float = 0.0
+    moved_bytes: int = 0
+    mode: str = "live"  # live | restart | ucp_restart | fallback
+
+
+class LiveRController:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        parallel: ParallelConfig,
+        opt_cfg: AdamWConfig,
+        seq_len: int,
+        global_batch: int,
+        data: Optional[SyntheticLM] = None,
+        ckpt_dir: Optional[str] = None,
+        ckpt_interval: int = 50,
+        staging_bytes: int = DEFAULT_STAGING_BYTES,
+        devices=None,
+        microbatches: int = 1,
+        compression: str = "none",
+        hint_version: str | None = None,
+        seed: int = 0,
+    ):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.seq_len = seq_len
+        self.global_batch = global_batch
+        self.staging_bytes = staging_bytes
+        self.devices = devices if devices is not None else jax.devices()
+        self.microbatches = microbatches
+        self.compression = compression
+        self.hint_version = hint_version
+        self.machine = GenerationMachine()
+        self.ledger = GoodputLedger()
+        self.records: list[ReconfigRecord] = []
+        self.iteration_times: list[float] = []
+        self.step = 0
+        self.data = data or SyntheticLM(cfg.vocab_size, seq_len, global_batch, seed)
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_interval = ckpt_interval
+        self._ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+        self._builder: Optional[ShadowBuilder] = None
+
+        # Active World (generation 0)
+        world = build_train_world(
+            cfg, parallel, opt_cfg, global_batch, seq_len,
+            microbatches=microbatches, devices=self._device_subset(parallel),
+            compression=compression, hint_version=hint_version,
+        )
+        world.gen_id = 0
+        self.machine.active.payload = world
+        from repro.distribution.step import init_train_state
+
+        self.params, self.opt_state = init_train_state(
+            cfg, world.mesh, seed=seed, compression=compression
+        )
+
+    # ------------------------------------------------------------------
+    @property
+    def world(self) -> WorldHandle:
+        return self.machine.active.payload
+
+    def _device_subset(self, parallel: ParallelConfig):
+        return self.devices[: parallel.world_size]
+
+    # ------------------------------------------------------------------
+    # Prepare (background)
+    # ------------------------------------------------------------------
+    def request_resize(self, target: ParallelConfig) -> int:
+        """Trigger: spawn Shadow World preparation. Non-blocking."""
+        gen = self.machine.begin_prepare(description=target.describe())
+
+        def build():
+            return build_train_world(
+                self.cfg,
+                target,
+                self.opt_cfg,
+                self.global_batch,
+                self.seq_len,
+                microbatches=self.microbatches,
+                devices=self._device_subset(target),
+                compression=self.compression,
+                hint_version=self.hint_version,
+            )
+
+        self._builder = ShadowBuilder(build, gen.gen_id).start()
+        return gen.gen_id
+
+    def cancel_resize(self) -> None:
+        """Target became stale before commit (paper §7): abandon shadow."""
+        self.machine.cancel()
+        self._builder = None
+
+    # ------------------------------------------------------------------
+    # Training loop with boundary polling
+    # ------------------------------------------------------------------
+    def train_steps(self, n: int, collect: Optional[Callable] = None) -> list[float]:
+        losses = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            batch = self._batch()
+            self.params, self.opt_state, metrics = self.world.step_fn(
+                self.params, self.opt_state, batch
+            )
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.iteration_times.append(dt)
+            self.ledger.record(t0, t0 + dt, "train", self.world.parallel.world_size)
+            losses.append(float(metrics["loss"]))
+            self.step += 1
+            if collect:
+                collect(self.step, metrics)
+            if self._ckpt and self.step % self.ckpt_interval == 0:
+                self._ckpt.save(self.step, {"params": self.params, "opt": self.opt_state})
+            self._poll_boundary()
+        return losses
+
+    def _batch(self):
+        tokens = jnp.asarray(self.data.global_batch_at(self.step))
+        batch = {"tokens": tokens}
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros(
+                (self.global_batch, self.seq_len, self.cfg.d_model), jnp.float32
+            )
+        return batch
+
+    def _poll_boundary(self) -> None:
+        """Iteration boundary = the consistent cut (invariant I3)."""
+        if self._builder is not None and self._builder.ready:
+            if self.machine.state == GenState.PREPARE:
+                handle = self._builder.result()
+                self.machine.mark_ready(self._builder.gen_id, payload=handle)
+            if self.machine.state == GenState.READY:
+                self._commit_switch()
+
+    # ------------------------------------------------------------------
+    # Switch (the only pause on the live path)
+    # ------------------------------------------------------------------
+    def _commit_switch(self) -> None:
+        gen_id = self._builder.gen_id
+        new_world: WorldHandle = self.machine.shadow.payload
+        rec = ReconfigRecord(
+            gen_id=gen_id,
+            src=self.world.parallel.describe(),
+            dst=new_world.parallel.describe(),
+            prepare_s=new_world.timings.get("prepare_total_s", 0.0),
+        )
+        pause_start = time.perf_counter()
+        self.machine.begin_switch(gen_id)
+
+        # 1. drain: all in-flight device work completes (1F1B boundary)
+        t0 = time.perf_counter()
+        jax.block_until_ready((self.params, self.opt_state))
+        rec.drain_s = time.perf_counter() - t0
+
+        # 2. streaming transfer: live reshard onto the new world
+        t0 = time.perf_counter()
+        ps, os_, _ = new_world.shardings
+        self.params, rep_p = live_reshard(
+            self.params, ps, staging_bytes=self.staging_bytes
+        )
+        self.opt_state, rep_o = live_reshard(
+            self.opt_state, os_, staging_bytes=self.staging_bytes
+        )
+        rec.transfer_s = time.perf_counter() - t0
+        rec.moved_bytes = rep_p.moved_bytes + rep_o.moved_bytes
+
+        # 3. atomic switch: pointer swap of world references
+        t0 = time.perf_counter()
+        old = self.machine.commit_switch(gen_id)
+        rec.switch_s = time.perf_counter() - t0
+
+        rec.total_pause_s = time.perf_counter() - pause_start
+        self.ledger.record(
+            pause_start,
+            pause_start + rec.total_pause_s,
+            "pause",
+            max(self.world.parallel.world_size, new_world.parallel.world_size),
+        )
+        self.records.append(rec)
+        self._builder = None
+
+        # 4. cleanup (old world resources released; mesh handles are cheap
+        # in JAX — state arrays were donated during reshard)
+        old.payload = None
+        self.machine.finish_cleanup()
+
+    # ------------------------------------------------------------------
+    # Fail-stop fallback (invariant I4) and restart baselines
+    # ------------------------------------------------------------------
+    def fail_stop_recover(self, target: ParallelConfig) -> ReconfigRecord:
+        """Unannounced failure: rebuild from the latest durable checkpoint."""
+        assert self.ckpt_dir, "fallback requires a checkpoint directory"
+        if self._ckpt:
+            self._ckpt.wait()
+        rec = ReconfigRecord(
+            gen_id=-1, src=self.world.parallel.describe(),
+            dst=target.describe(), mode="fallback",
+        )
+        pause_start = time.perf_counter()
+        # residual shadow work (paper §4.1 graceful degradation): a ready
+        # shadow for the same target skips re-initialization
+        residual = None
+        if (
+            self._builder is not None
+            and self._builder.ready
+            and self.machine.shadow is not None
+        ):
+            cand: WorldHandle = self._builder.result()
+            if cand.parallel == target:
+                residual = cand
+        if self.machine.state in (GenState.PREPARE, GenState.READY):
+            self.machine.cancel()
+        self._builder = None
+
+        t0 = time.perf_counter()
+        world = residual or build_train_world(
+            self.cfg, target, self.opt_cfg, self.global_batch, self.seq_len,
+            microbatches=self.microbatches, devices=self._device_subset(target),
+            compression=self.compression, hint_version=self.hint_version,
+        )
+        init_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        ps, os_, _ = world.shardings
+        like = {
+            "params": jax.tree_util.tree_map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                jax.eval_shape(lambda: self.params),
+            ),
+        }
+        state, step, load_s = load_checkpoint(
+            self.ckpt_dir,
+            like={"params": self.params, "opt": self.opt_state},
+            target_shardings={"params": ps, "opt": os_},
+        )
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step = step
+
+        gen = self.machine.begin_prepare("failstop-" + target.describe())
+        self.machine.mark_ready(gen.gen_id, payload=world)
+        self.machine.begin_switch(gen.gen_id)
+        old = self.machine.commit_switch(gen.gen_id)
+        old.payload = None
+        self.machine.finish_cleanup()
+
+        rec.transfer_s = load_s
+        rec.prepare_s = init_s
+        rec.total_pause_s = time.perf_counter() - pause_start
+        self.ledger.record(
+            pause_start, pause_start + rec.total_pause_s, "pause",
+            target.world_size,
+        )
+        self.records.append(rec)
+        return rec
+
+    def gathered_params(self) -> Any:
+        """Fully-replicated host copy (verification only — never on the
+        live path)."""
+        return jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), self.params
+        )

@@ -1,0 +1,45 @@
+"""Downtime / goodput accounting (drives Figs. 6–8 benchmarks).
+
+Goodput here = fraction of wall-clock × allocated-GPU area spent making
+training progress (the paper's 'training efficiency').
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class Interval:
+    start: float
+    end: float
+    kind: str  # "train" | "pause" | "idle"
+    gpus: int
+
+
+@dataclass
+class GoodputLedger:
+    intervals: list[Interval] = field(default_factory=list)
+
+    def record(self, start: float, end: float, kind: str, gpus: int) -> None:
+        assert end >= start
+        self.intervals.append(Interval(start, end, kind, gpus))
+
+    def gpu_seconds(self, kind: str | None = None) -> float:
+        return sum(
+            (iv.end - iv.start) * iv.gpus
+            for iv in self.intervals
+            if kind is None or iv.kind == kind
+        )
+
+    @property
+    def goodput(self) -> float:
+        total = self.gpu_seconds()
+        return self.gpu_seconds("train") / total if total else 0.0
+
+    @property
+    def pause_seconds(self) -> float:
+        return sum(iv.end - iv.start for iv in self.intervals if iv.kind == "pause")
+
+    def wasted_gpu_hours(self) -> float:
+        return (self.gpu_seconds("pause") + self.gpu_seconds("idle")) / 3600.0

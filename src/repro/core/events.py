@@ -1,0 +1,33 @@
+"""Elasticity events (paper §4.1 'Elasticity event spectrum').
+
+Planned resizes and preemption warnings carry a warning window; fail-stop
+events do not (invariant I4 routes them to checkpoint recovery).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+from repro.configs.base import ParallelConfig
+
+
+@dataclass(frozen=True)
+class ResizeEvent:
+    """Warning-based or planned elasticity event."""
+
+    time_s: float  # when the event fires (trace time)
+    target: ParallelConfig  # topology chosen by the (external) search system
+    warning_s: float = 120.0  # e.g. AWS Spot's 2-minute notice
+    kind: str = "resize"  # resize | scale_out | scale_in | preempt
+
+    @property
+    def deadline_s(self) -> float:
+        return self.time_s + self.warning_s
+
+
+@dataclass(frozen=True)
+class FailStopEvent:
+    time_s: float
+    lost_ranks: tuple[int, ...] = ()
+    kind: str = "fail_stop"

@@ -1,0 +1,155 @@
+"""Shadow World construction (paper §4.4 'Parallel Worlds').
+
+While the Active World keeps training, a background thread (the Companion
+Manager's worker) builds the target world. The JAX mapping of the paper's
+Prepare phase:
+
+  1. mesh construction over the target device set   (process-group analogue)
+  2. ``lower()`` — trace + StableHLO + sharding inference. Device-free: this
+     IS the mock-process-group warmup (local work, no coordination); the
+     standalone abstract-mesh variant lives in core/mock_groups.py.
+  3. ``compile()`` — XLA compilation + executable load onto the target
+     devices (the NCCL-communicator-setup + JIT-warmup analogue).
+
+All three run off the critical path; §6.3's steady-state-interference
+experiment is reproduced in benchmarks/bench_interference.py.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+from jax.sharding import Mesh
+
+from repro.configs.base import ModelConfig, ParallelConfig
+
+
+@dataclass
+class WorldHandle:
+    """Everything the training loop needs from a world: the communicator
+    analogue (mesh) + pre-compiled executable + shardings."""
+
+    parallel: ParallelConfig
+    mesh: Mesh
+    step_fn: Callable  # compiled train step (jax.stages.Compiled)
+    shardings: Any  # (param_sh, opt_sh, batch_sh)
+    gen_id: int = -1
+    timings: dict = field(default_factory=dict)
+
+
+class ShadowBuilder:
+    """Builds a WorldHandle in a daemon thread; poll ``ready`` — the
+    Companion Manager thread of the paper's §4.5.1."""
+
+    def __init__(self, build_fn: Callable[[], WorldHandle], gen_id: int):
+        self._build_fn = build_fn
+        self.gen_id = gen_id
+        self._result: Optional[WorldHandle] = None
+        self._error: Optional[BaseException] = None
+        self._done = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self.started_at = time.perf_counter()
+
+    def start(self) -> "ShadowBuilder":
+        self._thread.start()
+        return self
+
+    def _run(self) -> None:
+        try:
+            handle = self._build_fn()
+            handle.gen_id = self.gen_id
+            handle.timings["prepare_total_s"] = time.perf_counter() - self.started_at
+            self._result = handle
+        except BaseException as e:  # surfaced on result()
+            self._error = e
+        finally:
+            self._done.set()
+
+    @property
+    def ready(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> WorldHandle:
+        if not self._done.wait(timeout):
+            raise TimeoutError("shadow world not ready")
+        if self._error is not None:
+            raise self._error
+        assert self._result is not None
+        return self._result
+
+
+def build_train_world(
+    cfg: ModelConfig,
+    parallel: ParallelConfig,
+    opt_cfg,
+    global_batch: int,
+    seq_len: int,
+    microbatches: int = 1,
+    devices=None,
+    compression: str = "none",
+    aot: bool = True,
+    hint_version: str | None = None,
+) -> WorldHandle:
+    """Synchronous world construction (the shadow thread's body)."""
+    import jax.numpy as jnp
+
+    from repro.distribution.sharding import make_elastic_mesh
+    from repro.distribution.step import jit_train_step
+    from repro.models.model import abstract_params
+    from repro.optim import adamw_init
+
+    timings: dict = {}
+    t0 = time.perf_counter()
+    mesh = make_elastic_mesh(parallel, devices=devices)
+    timings["mesh_s"] = time.perf_counter() - t0
+
+    if parallel.pp > 1:
+        from repro.distribution.pipeline import jit_pipeline_train_step
+
+        jitted, shardings = jit_pipeline_train_step(
+            cfg, mesh, parallel, opt_cfg, global_batch, max(microbatches, parallel.pp)
+        )
+    else:
+        jitted, shardings = jit_train_step(
+            cfg,
+            mesh,
+            opt_cfg,
+            global_batch,
+            microbatches=microbatches,
+            compression=compression,
+            hint_version=hint_version,
+        )
+
+    step_fn = jitted
+    if aot:
+        aparams = abstract_params(cfg)
+        aopt = jax.eval_shape(lambda: adamw_init(aparams))
+        if compression == "int8_ef":
+            aopt = dict(aopt)
+            aopt["ef"] = jax.tree_util.tree_map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), aparams
+            )
+        abatch = {"tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)}
+        if cfg.family == "encdec":
+            abatch["frames"] = jax.ShapeDtypeStruct(
+                (global_batch, seq_len, cfg.d_model),
+                {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype],
+            )
+        t0 = time.perf_counter()
+        lowered = jitted.lower(aparams, aopt, abatch)  # mock-warmup analogue
+        timings["lower_s"] = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        step_fn = lowered.compile()  # communicator-setup analogue
+        timings["compile_s"] = time.perf_counter() - t0
+
+    return WorldHandle(
+        parallel=parallel,
+        mesh=mesh,
+        step_fn=step_fn,
+        shardings=shardings,
+        timings=timings,
+    )

@@ -1,0 +1,154 @@
+"""Target-topology search (the paper's §2.3(D) integration point).
+
+LiveR solves the *execution* problem — transitioning between parallelism
+configurations without stopping — and explicitly defers the *search* problem
+("which configuration to choose") to an external system: "A natural
+integration would have the search system determine the target (TP', PP',
+DP') and LiveR execute the live transition."
+
+This module is that search system: given a device count and a model config,
+it enumerates feasible ``ParallelConfig``s (divisibility + per-chip memory)
+and ranks them with a roofline-flavored step-time model (compute + the
+structural TP/DP collective terms), optionally weighing the *transition
+cost* from the current config (bytes moved under the intersection plan) so
+frequent small resizes prefer nearby layouts — a liveness-aware refinement
+the paper's discussion motivates.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.launch.mesh import HBM_BW, HBM_BYTES, ICI_BW, PEAK_FLOPS_BF16
+
+
+@dataclass(frozen=True)
+class Candidate:
+    parallel: ParallelConfig
+    step_time_s: float
+    mem_per_chip: float
+    transition_bytes: int = 0
+    score: float = 0.0
+
+
+def _divisors(n: int) -> list[int]:
+    return [d for d in range(1, n + 1) if n % d == 0]
+
+
+def feasible_configs(
+    cfg: ModelConfig,
+    world: int,
+    global_batch: int,
+    max_pp: int = 8,
+) -> list[ParallelConfig]:
+    """All (dp, pp, tp) with dp·pp·tp == world respecting divisibility:
+    dp | global_batch, pp | n_periods, tp bounded by head/ffn divisibility."""
+    from repro.models.transformer import n_periods
+
+    np_ = n_periods(cfg)
+    out = []
+    for tp in _divisors(world):
+        if cfg.d_ff and cfg.d_ff % tp != 0 and (cfg.num_heads * cfg.resolved_head_dim) % tp != 0:
+            continue
+        rest = world // tp
+        for pp in _divisors(rest):
+            if pp > max_pp or np_ % pp != 0:
+                continue
+            dp = rest // pp
+            if global_batch % dp != 0:
+                continue
+            out.append(ParallelConfig(dp=dp, pp=pp, tp=tp))
+    return out
+
+
+def estimate_step_time(
+    cfg: ModelConfig,
+    parallel: ParallelConfig,
+    global_batch: int,
+    seq_len: int,
+) -> tuple[float, float]:
+    """(step seconds, param+opt bytes per chip) — napkin roofline model.
+
+    compute: 6·N_active·D/(world·peak) with a pipeline-bubble factor;
+    collective: Megatron-TP's ~4 activation collectives per layer over ICI +
+    the DP gradient reduce.
+    """
+    from repro.models.model import analytic_param_count
+
+    n_active = analytic_param_count(cfg, active_only=True)
+    n_total = analytic_param_count(cfg)
+    world = parallel.world_size
+    tokens = global_batch * seq_len
+
+    compute = 6.0 * n_active * tokens / (world * PEAK_FLOPS_BF16)
+    # pipeline bubble (GPipe-ish): (pp-1)/(m + pp - 1), m = microbatches
+    m = max(global_batch // parallel.dp, 1)
+    bubble = (parallel.pp - 1) / (m + parallel.pp - 1)
+    compute /= max(1e-9, 1.0 - bubble)
+
+    # TP activation collectives: ~4 per layer, bytes = tokens/dp·d·2B, only
+    # when tp > 1; DP gradient reduce-scatter+all-gather: 2·params·2B/world
+    coll = 0.0
+    if parallel.tp > 1:
+        coll += 4 * cfg.num_layers * (tokens / max(parallel.dp, 1)) * cfg.d_model * 2 / ICI_BW / max(parallel.dp * parallel.pp, 1)
+    if parallel.dp > 1:
+        coll += 2 * n_total * 2 / (world * ICI_BW)
+
+    # memory per chip: bf16 params + fp32 moments sharded over (tp·pp[·dp zeRO])
+    state = n_total * (2 + 8) / (parallel.tp * parallel.pp * parallel.dp)
+    act = (tokens / max(parallel.dp, 1) / m) * cfg.d_model * 2 * 4  # rough
+    mem = state + act
+    return compute + coll, mem
+
+
+def search(
+    cfg: ModelConfig,
+    world: int,
+    global_batch: int,
+    seq_len: int,
+    current: ParallelConfig | None = None,
+    transition_weight: float = 0.0,
+    hbm_bytes: float = HBM_BYTES,
+) -> list[Candidate]:
+    """Ranked feasible candidates (best first).
+
+    transition_weight converts transition bytes (from the intersection
+    planner, when ``current`` is given) into equivalent step-seconds so the
+    search trades steady-state speed against reconfiguration cost.
+    """
+    from repro.core.intersection import plan_transfer
+    from repro.core.resource_view import build_tensor_specs
+
+    cands = []
+    specs = build_tensor_specs(cfg) if (current and transition_weight) else None
+    for par in feasible_configs(cfg, world, global_batch):
+        t, mem = estimate_step_time(cfg, par, global_batch, seq_len)
+        if mem > hbm_bytes:
+            continue
+        tb = 0
+        if specs is not None and par != current:
+            tb = plan_transfer(
+                specs, current, par, layer_granular=False
+            ).network_bytes
+        score = t + transition_weight * tb
+        cands.append(Candidate(par, t, mem, tb, score))
+    return sorted(cands, key=lambda c: c.score)
+
+
+def best_target(
+    cfg: ModelConfig,
+    world: int,
+    global_batch: int,
+    seq_len: int,
+    current: ParallelConfig | None = None,
+    transition_weight: float = 0.0,
+) -> ParallelConfig:
+    cands = search(cfg, world, global_batch, seq_len, current, transition_weight)
+    if not cands:
+        raise ValueError(
+            f"no feasible topology for {cfg.name} at world={world} "
+            f"(batch {global_batch})"
+        )
+    return cands[0].parallel

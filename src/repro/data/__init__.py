@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLM, DataState
+
+__all__ = ["SyntheticLM", "DataState"]

@@ -1,0 +1,25 @@
+from repro.distribution.sharding import (
+    param_shardings,
+    batch_sharding,
+    cache_shardings,
+    opt_state_shardings,
+    make_elastic_mesh,
+)
+from repro.distribution.step import (
+    make_train_step,
+    make_prefill_step,
+    make_decode_step,
+    init_train_state,
+)
+
+__all__ = [
+    "param_shardings",
+    "batch_sharding",
+    "cache_shardings",
+    "opt_state_shardings",
+    "make_elastic_mesh",
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+    "init_train_state",
+]

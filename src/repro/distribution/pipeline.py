@@ -1,0 +1,185 @@
+"""Pipeline parallelism via shard_map over a ``pipe`` mesh axis.
+
+GPipe-schedule forward with `lax.ppermute` microbatch rotation; autodiff
+through the rotation yields the correct pipeline backward (transposed
+permutes). The ``pipe`` axis is *manual* (shard_map); ``data``/``model``
+axes stay automatic, so DP/TP compose with PP through GSPMD.
+
+Stage layout: the stacked-periods axis of every block tensor is split
+contiguously across stages (requires n_periods % pp == 0) — the same
+geometry the Abstract Resource View assigns to the "pp" role, so PP
+reconfiguration streams whole period-slices between stages (paper
+App. A.2.3: "entire layers move; the intersection is the full tensor or
+empty"). Embedding/head are pipe-replicated here (compute gated to their
+owning stage); Megatron instead owns them on first/last stage — the
+resource view models that ownership, the trainer trades the memory for
+simplicity. MoE aux loss is not accumulated in the pipeline trainer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models.transformer import _block_apply_full, block_program, n_periods
+from repro.optim import AdamWConfig, adamw_update
+from repro.utils.pytree import axes_paths, tree_paths, tree_from_paths
+
+
+def pipeline_param_specs(cfg: ModelConfig, pp: int):
+    """PartitionSpecs over the pipe axis only (manual axis of shard_map)."""
+    from repro.models.model import abstract_params, param_logical_axes
+
+    params = abstract_params(cfg)
+    axes = axes_paths(param_logical_axes(cfg))
+    flat = tree_paths(params)
+    out = {}
+    for path, leaf in flat.items():
+        ax = axes[path]
+        if ax and ax[0] == "layers":
+            out[path] = P("pipe")
+        else:
+            out[path] = P()
+    return tree_from_paths(out, params)
+
+
+def make_pipeline_loss(cfg: ModelConfig, parallel: ParallelConfig, microbatches: int):
+    """Loss over a pipelined forward; call under shard_map(axis 'pipe')."""
+    prog = block_program(cfg)
+    np_ = n_periods(cfg)
+    pp = parallel.pp
+    assert np_ % pp == 0, f"n_periods {np_} must divide by pp {pp}"
+    assert microbatches >= pp, "need microbatches >= pp to fill the pipeline"
+
+    def stage_forward(stage_blocks, x, positions):
+        def body(carry, period_params):
+            h = carry
+            for j, (mixer, mlp) in enumerate(prog):
+                h, _, _ = _block_apply_full(
+                    period_params[f"pos{j}"], cfg, mixer, mlp, h, positions, True
+                )
+            return h, None
+
+        x, _ = lax.scan(jax.checkpoint(body), x, stage_blocks)
+        return x
+
+    def pipe_loss(params, tokens):
+        stage = lax.axis_index("pipe")
+        Bl, S = tokens.shape
+        assert Bl % microbatches == 0, (Bl, microbatches)
+        mb = Bl // microbatches
+        toks = tokens.reshape(microbatches, mb, S)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (mb, S))
+        adt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+        d = cfg.d_model
+        T = microbatches + pp - 1
+        perm = [(i, (i + 1) % pp) for i in range(pp)]
+
+        def tick(carry, t):
+            x_prev, tok_prev, loss_acc = carry
+            inject_idx = jnp.clip(t, 0, microbatches - 1)
+            tok_inject = toks[inject_idx]
+            x_inject = L.embed_apply(params["embed"], tok_inject, adt)
+            use_inject = (stage == 0) & (t < microbatches)
+            x_in = jnp.where(use_inject, x_inject, x_prev)
+            tok_in = jnp.where(use_inject, tok_inject, tok_prev)
+
+            y = stage_forward(params["blocks"], x_in, positions)
+
+            # NOTE: computed unconditionally and masked — a lax.cond here
+            # would put the TP all-reduce of the lm_head matmul inside a
+            # branch only last-stage devices take, deadlocking SPMD
+            # execution (collectives must be executed by every device).
+            h = L.rmsnorm_apply(params["final_norm"], y)
+            logits = L.lm_head_apply(params.get("lm_head"), params["embed"], h).astype(
+                jnp.float32
+            )
+            lz = jax.scipy.special.logsumexp(logits[:, :-1], axis=-1)
+            tgt = jnp.take_along_axis(logits[:, :-1], tok_in[:, 1:, None], axis=-1)[
+                ..., 0
+            ]
+            mb_loss = (lz - tgt).mean()
+            is_out = (stage == pp - 1) & (t >= pp - 1)
+            loss_acc = loss_acc + jnp.where(is_out, mb_loss, 0.0)
+
+            y_send = lax.ppermute(y, "pipe", perm)
+            tok_send = lax.ppermute(tok_in, "pipe", perm)
+            return (y_send, tok_send, loss_acc), None
+
+        x0 = lax.pvary(jnp.zeros((mb, S, d), adt), ("pipe",))
+        tok0 = lax.pvary(jnp.zeros((mb, S), jnp.int32), ("pipe",))
+        loss0 = lax.pvary(jnp.float32(0.0), ("pipe",))
+        (xf, tokf, loss_sum), _ = lax.scan(tick, (x0, tok0, loss0), jnp.arange(T))
+        return lax.psum(loss_sum, "pipe") / microbatches
+
+    return pipe_loss
+
+
+def jit_pipeline_train_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    parallel: ParallelConfig,
+    opt_cfg: AdamWConfig,
+    global_batch: int,
+    microbatches: int,
+):
+    """Pipelined pjit train step on an elastic mesh with a 'pipe' axis.
+
+    Returns (jitted_fn(params, opt_state, batch)->(params,opt,metrics),
+    (param_shardings, opt_shardings, batch_shardings)).
+    """
+    pipe_specs = pipeline_param_specs(cfg, parallel.pp)
+    loss_inner = make_pipeline_loss(cfg, parallel, microbatches)
+
+    sharded_loss = jax.shard_map(
+        loss_inner,
+        mesh=mesh,
+        in_specs=(pipe_specs, P()),
+        out_specs=P(),
+        axis_names={"pipe"},
+    )
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: sharded_loss(p, batch["tokens"])
+        )(params)
+        new_params, new_opt, om = adamw_update(opt_cfg, grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, **om}
+
+    # device shardings: pipe specs on stacked leaves; model/data via rules
+    from repro.distribution.sharding import (
+        batch_sharding,
+        opt_state_shardings,
+        param_shardings,
+    )
+
+    ps_rules = param_shardings(cfg, mesh)
+
+    def merge(rule_sh, pipe_spec, leaf):
+        spec = list(rule_sh.spec) + [None] * (leaf.ndim - len(rule_sh.spec))
+        if pipe_spec and len(pipe_spec) > 0 and pipe_spec[0] == "pipe":
+            spec[0] = "pipe"
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+
+    from repro.models.model import abstract_params
+
+    aparams = abstract_params(cfg)
+    ps = jax.tree_util.tree_map(merge, ps_rules, pipe_specs, aparams)
+    os_ = {"mu": ps, "nu": ps, "count": NamedSharding(mesh, P())}
+    bs = {"tokens": batch_sharding(mesh, global_batch)}
+    jitted = jax.jit(
+        train_step,
+        in_shardings=(ps, os_, bs),
+        out_shardings=(ps, os_, None),
+        donate_argnums=(0, 1),
+    )
+    return jitted, (ps, os_, bs)

@@ -1,0 +1,187 @@
+"""Logical-axis → mesh sharding rules with divisibility-aware fallbacks.
+
+The production mesh is ``("data","model")`` (single pod) or
+``("pod","data","model")`` (multi-pod):
+  * tensor-parallel logical axes (ffn/heads/vocab/…) map to ``model``
+  * the embed dim of weight matrices maps to ``data`` (FSDP-style parameter
+    sharding — XLA inserts the all-gathers at use)
+  * the batch dim maps to ``("pod","data")``; parameters are replicated
+    across pods (gradient all-reduce over ``pod``)
+Elastic meshes add ``pipe`` / ``expert`` axes for PP / EP configurations.
+A rule is dropped (dim replicated) when sizes do not divide; one mesh axis
+is never assigned to two dims of the same tensor.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.models.model import param_logical_axes
+from repro.utils.pytree import axes_paths
+
+# preference-ordered mesh axes per logical axis; first divisible wins
+RULES: dict[str, tuple[str, ...]] = {
+    "vocab": ("model",),
+    "ffn": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "inner": ("model",),
+    "ssm_heads": ("model",),
+    "expert_in": (),
+    "state": (),
+    "head_dim": (),
+    "conv_k": (),
+    "embed": ("data",),  # FSDP param sharding
+    "layers": ("pipe",),
+    "expert": ("expert", "model"),
+}
+
+
+def make_elastic_mesh(parallel: ParallelConfig, devices=None) -> Mesh:
+    """Mesh for an arbitrary ParallelConfig over the first world_size
+    devices: axes (data, pipe, expert, model)."""
+    devices = devices if devices is not None else jax.devices()
+    n = parallel.world_size
+    assert len(devices) >= n, (len(devices), n)
+    dev = np.asarray(devices[:n]).reshape(
+        parallel.dp, parallel.pp, parallel.ep, parallel.tp
+    )
+    return Mesh(dev, ("data", "pipe", "expert", "model"))
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def _spec_for_axes(
+    mesh: Mesh, logical: tuple[str, ...], shape: tuple[int, ...]
+) -> P:
+    used: set[str] = set()
+    out: list[Optional[str]] = []
+    for d, ax in enumerate(logical):
+        assigned = None
+        for mesh_ax in RULES.get(ax, ()):
+            if mesh_ax in mesh.axis_names and mesh_ax not in used:
+                if shape[d] % _axis_size(mesh, mesh_ax) == 0 and _axis_size(mesh, mesh_ax) > 1:
+                    assigned = mesh_ax
+                    used.add(mesh_ax)
+                    break
+        out.append(assigned)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, serving: bool = False):
+    """NamedSharding tree mirroring the param tree.
+
+    serving=True drops the FSDP ("embed"->data) rule: parameters replicate
+    across the data axis so decode steps avoid per-token param all-gathers
+    (memory is ample at inference: no optimizer state, no activations)."""
+    axes = param_logical_axes(cfg)
+
+    def to_sharding(ax_tuple, leaf):
+        if serving:
+            ax_tuple = tuple("_noshard" if a == "embed" else a for a in ax_tuple)
+        return NamedSharding(mesh, _spec_for_axes(mesh, ax_tuple, leaf.shape))
+
+    from repro.models.model import abstract_params
+
+    params = abstract_params(cfg)
+    flat_axes = axes_paths(axes)
+    from repro.utils.pytree import tree_paths, tree_from_paths
+
+    flat_params = tree_paths(params)
+    shardings = {
+        path: to_sharding(flat_axes[path], leaf) for path, leaf in flat_params.items()
+    }
+    return tree_from_paths(shardings, params)
+
+
+def opt_state_shardings(cfg: ModelConfig, mesh: Mesh):
+    ps = param_shardings(cfg, mesh)
+    return {
+        "mu": ps,
+        "nu": ps,
+        "count": NamedSharding(mesh, P()),
+    }
+
+
+def batch_sharding(mesh: Mesh, batch: int, ndim: int = 2) -> NamedSharding:
+    """Batch dim over (pod, data) — dropping axes that don't divide."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    keep: list[str] = []
+    prod = 1
+    for a in axes:
+        if batch % (prod * _axis_size(mesh, a)) == 0:
+            keep.append(a)
+            prod *= _axis_size(mesh, a)
+    spec = P(tuple(keep)) if keep else P()
+    return NamedSharding(mesh, spec)
+
+
+def activation_sharding(mesh: Mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(axes if axes else None)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, max_seq: int):
+    """Adaptive KV/state-cache shardings.
+
+    Cascade per attention cache (np_, b, T, kh, hd):
+      batch -> ("pod","data") when divisible;
+      kv_heads -> "model" when divisible, else T -> "model"
+      (sequence-parallel decode; partial-softmax combine is handled by XLA
+      through the masked softmax reduction);
+      when batch is unshardable (long-context b=1), T also takes "data".
+    """
+    from repro.models.model import abstract_cache
+    from repro.utils.pytree import tree_paths, tree_from_paths
+
+    cache = abstract_cache(cfg, batch, max_seq)
+    md = _axis_size(mesh, "model")
+    batch_axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    b_div = all(batch % _axis_size(mesh, a) == 0 for a in batch_axes) and batch >= int(
+        np.prod([_axis_size(mesh, a) for a in batch_axes]) or 1
+    )
+
+    def kv_spec(leaf):
+        # (np_, b, T, kh, hd)
+        np_, b, T, kh, hd = leaf.shape
+        bspec = tuple(batch_axes) if b_div else None
+        if kh % md == 0 and md > 1:
+            return P(None, bspec, None, "model", None)
+        seq_axes = ["model"] if md > 1 and T % md == 0 else []
+        if not b_div:
+            for a in reversed(batch_axes):
+                if T % (_axis_size(mesh, a) * int(np.prod([_axis_size(mesh, x) for x in seq_axes]) or 1)) == 0:
+                    seq_axes.insert(0, a)
+        return P(None, bspec, tuple(seq_axes) if seq_axes else None, None, None)
+
+    def ssm_spec(leaf):
+        # ssd: (np_, b, h, p, n) / conv: (np_, b, k, ch)
+        bspec = tuple(batch_axes) if b_div else None
+        if leaf.ndim == 5:
+            h = leaf.shape[2]
+            hspec = "model" if md > 1 and h % md == 0 else None
+            return P(None, bspec, hspec, None, None)
+        ch = leaf.shape[3]
+        cspec = "model" if md > 1 and ch % md == 0 else None
+        return P(None, bspec, None, cspec)
+
+    flat = tree_paths(cache)
+    out = {}
+    for path, leaf in flat.items():
+        if "/k" in path or "/v" in path:
+            spec = kv_spec(leaf)
+        elif path.endswith("ssd"):
+            spec = ssm_spec(leaf)
+        else:
+            spec = ssm_spec(leaf)
+        out[path] = NamedSharding(mesh, spec)
+    return tree_from_paths(out, cache)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots, each with a jit'd wrapper
+(ops.py) and a pure-jnp oracle (ref.py). Validated with interpret=True on
+CPU; native on TPU backends."""
+
+from repro.kernels import ref
+
+# ops imported lazily by callers (``from repro.kernels import ops``) to keep
+# import costs off modules that only need the oracles.
+__all__ = ["ref", "ops"]

@@ -1,0 +1,147 @@
+"""Pallas TPU flash attention (forward) with causal/sliding-window masking
+and GQA head mapping.
+
+Grid layout: ``(batch, q_heads, num_q_blocks, num_k_blocks)`` with the
+k-block dimension innermost ("arbitrary" semantics) so the VMEM scratch
+accumulators (running max / denominator / output block) persist across the
+online-softmax reduction — the canonical TPU flash pattern. Block shapes are
+chosen so q/k/v tiles are MXU-aligned: ``(block_q, head_dim)`` ×
+``(block_k, head_dim)`` with head_dim padded to a multiple of 128 by the
+wrapper if needed.
+
+The oracle is :func:`repro.kernels.ref.flash_attention_ref`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(
+    q_ref,  # (1, block_q, 1, d)
+    k_ref,  # (1, block_k, 1, d)
+    v_ref,  # (1, block_k, 1, d)
+    o_ref,  # (1, block_q, 1, d)
+    m_scr,  # (block_q, 1) f32 scratch
+    l_scr,  # (block_q, 1) f32 scratch
+    acc_scr,  # (block_q, d) f32 scratch
+    *,
+    scale: float,
+    causal: bool,
+    window: int,
+    block_q: int,
+    block_k: int,
+    q_offset: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale  # (bq, d)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bk, d)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, bk)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0) + q_offset
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]  # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)  # (bq, bk)
+    alpha = jnp.exp(m_prev - m_new)  # (bq, 1)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc = acc_scr[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+    acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _flush():
+        denom = jnp.where(l_scr[...] == 0.0, 1.0, l_scr[...])
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,  # (b, s, h, d)
+    k: jax.Array,  # (b, t, kh, d)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, h, d = q.shape
+    t, kh = k.shape[1], k.shape[2]
+    rep = h // kh
+    if scale is None:
+        scale = d**-0.5
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0, (s, t, block_q, block_k)
+    grid = (b, h, s // block_q, t // block_k)
+    q_offset = t - s  # right-aligned queries (prefill continuation)
+
+    kernel = functools.partial(
+        _fa_kernel,
+        scale=scale,
+        causal=causal,
+        window=window,
+        block_q=block_q,
+        block_k=block_k,
+        q_offset=q_offset,
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d), lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec(
+                (1, block_k, 1, d), lambda bi, hi, qi, ki: (bi, ki, hi // rep, 0)
+            ),
+            pl.BlockSpec(
+                (1, block_k, 1, d), lambda bi, hi, qi, ki: (bi, ki, hi // rep, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, 1, d), lambda bi, hi, qi, ki: (bi, qi, hi, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

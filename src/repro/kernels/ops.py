@@ -1,0 +1,161 @@
+"""Jit-ready kernel entry points used by the model code.
+
+Dispatch policy: on TPU backends the Pallas kernels run natively; on CPU
+(this container) the mathematically identical pure-jnp references execute
+instead — Pallas interpret mode is reserved for the kernel unit tests
+(it is a Python-level interpreter, far too slow for full models).
+Set ``REPRO_FORCE_PALLAS_INTERPRET=1`` to force the Pallas path in
+interpret mode (used by integration tests to exercise kernel plumbing).
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.reshard_pack import pack_rows_pallas, unpack_rows_pallas
+from repro.kernels.ssd_scan import ssd_intra_chunk_pallas
+
+
+def _use_pallas() -> tuple[bool, bool]:
+    """(use_pallas, interpret)."""
+    if os.environ.get("REPRO_FORCE_PALLAS_INTERPRET") == "1":
+        return True, True
+    return jax.default_backend() == "tpu", False
+
+
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, scale=None):
+    use, interp = _use_pallas()
+    s, t, d = q.shape[1], k.shape[1], q.shape[-1]
+    aligned = s % 128 == 0 and t % 128 == 0 and d % 8 == 0
+    if use and aligned:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, window=window, scale=scale, interpret=interp
+        )
+    return _ref.flash_attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def decode_attention(q, k, v, mask, scale):
+    """Single-token attention against a KV cache (matvec-shaped; XLA's fused
+    path is already bandwidth-optimal, no kernel needed)."""
+    return _ref.decode_attention_ref(q, k, v, mask, scale)
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    use, interp = _use_pallas()
+    if use and x.shape[-1] % 128 == 0:
+        return rmsnorm_pallas(x, scale, eps=eps, interpret=interp)
+    return _ref.rmsnorm_ref(x, scale, eps)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan: pallas intra-chunk + jnp inter-chunk recurrence
+# ---------------------------------------------------------------------------
+
+
+def _ssd_inter(cum, Cc, S, chunk_decay, init_state, y_intra_shape):
+    """Inter-chunk recurrence shared by kernel and ref paths.
+
+    cum: (b,nc,q,h); Cc: (b,nc,q,n); S: (b,nc,h,p,n); chunk_decay: (b,nc,h).
+    Returns (y_inter (b,nc,q,h,p), final_state (b,h,p,n)).
+    """
+    b, nc, q, h = cum.shape
+    p = S.shape[3]
+
+    def step(carry, inputs):
+        S_c, dec_c = inputs
+        h_new = dec_c[:, :, None, None] * carry + S_c
+        return h_new, carry
+
+    final, h_prevs = jax.lax.scan(
+        step, init_state, (S.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )
+    h_prevs = h_prevs.swapaxes(0, 1)  # (b,nc,h,p,n)
+    state_decay_in = jnp.exp(cum)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, state_decay_in, h_prevs)
+    return y_inter, final
+
+
+def ssd_scan(x, dt, A, B, C, chunk, init_state=None):
+    """Chunked SSD scan. Shapes as in ref.ssd_scan_ref; returns (y, final).
+
+    Pads the sequence up to a chunk multiple (dt=0 padding is a no-op:
+    zero contribution, unit decay) and crops the output.
+    """
+    use, interp = _use_pallas()
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    if not use:
+        y, final = _ref.ssd_scan_ref(x, dt, A, B, C, chunk, init_state)
+        return (y[:, :s] if pad else y), final
+
+    sp = s + pad
+    nc, q = sp // chunk, chunk
+    a = dt.reshape(b, nc, q, h) * A[None, None, None, :]
+    cum = jnp.cumsum(a, axis=2)  # within-chunk inclusive cumsum
+    cum_flat = cum.reshape(b, sp, h)
+
+    y_intra, S = ssd_intra_chunk_pallas(
+        x, dt, cum_flat, B, C, chunk, interpret=interp
+    )
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+    Cc = C.reshape(b, nc, q, n).astype(jnp.float32)
+    y_inter, final = _ssd_inter(cum, Cc, S, chunk_decay, init_state, None)
+    y = y_intra.reshape(b, nc, q, h, p) + y_inter
+    y = y.reshape(b, sp, h, p)
+    return (y[:, :s] if pad else y), final
+
+
+# ---------------------------------------------------------------------------
+# Reshard staging-buffer pack/unpack
+# ---------------------------------------------------------------------------
+
+
+def pack_rows(src, row_starts, block_rows: int):
+    use, interp = _use_pallas()
+    import numpy as np
+
+    aligned = (
+        src.shape[0] % block_rows == 0
+        and src.shape[1] % 128 == 0
+        and bool(np.all(np.asarray(row_starts) % block_rows == 0))
+    )
+    if use and aligned:
+        return pack_rows_pallas(
+            src, jnp.asarray(row_starts, jnp.int32), block_rows, interpret=interp
+        )
+    return _ref.pack_rows_ref(src, jnp.asarray(row_starts, jnp.int32), block_rows)
+
+
+def unpack_rows(buf, row_starts, block_rows: int, out_rows: int):
+    use, interp = _use_pallas()
+    import numpy as np
+
+    aligned = (
+        out_rows % block_rows == 0
+        and buf.shape[1] % 128 == 0
+        and bool(np.all(np.asarray(row_starts) % block_rows == 0))
+    )
+    if use and aligned:
+        return unpack_rows_pallas(
+            buf, jnp.asarray(row_starts, jnp.int32), block_rows, out_rows, interpret=interp
+        )
+    return _ref.unpack_rows_ref(
+        buf, jnp.asarray(row_starts, jnp.int32), block_rows, out_rows
+    )

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel for the Mamba-2 SSD *intra-chunk* block.
+
+The SSD chunked algorithm splits into (a) a quadratic-within-chunk part —
+``(C·Bᵀ ∘ L) · X`` plus the per-chunk state contribution — which dominates
+FLOPs and is what this kernel computes, and (b) a cheap O(num_chunks)
+inter-chunk recurrence handled in plain JAX by the wrapper in ``ops.py``.
+
+Grid: ``(batch, heads, num_chunks)``, one (chunk × head_dim) tile per step.
+All operands for one grid step fit VMEM: with chunk=128, head_dim=64,
+d_state=128 fp32 the working set is ≈ 0.4 MB ≪ 16 MB VMEM, and the two
+matmuls (q×q @ q×p and n×q @ q×p) feed the MXU with 128-aligned dims.
+
+Oracle: :func:`repro.kernels.ref.ssd_scan_ref` (intra-chunk terms).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(
+    x_ref,  # (1, chunk, 1, p)
+    dt_ref,  # (1, chunk, 1)
+    cum_ref,  # (1, chunk, 1)   cumsum(dt*A) within chunk
+    b_ref,  # (1, chunk, n)
+    c_ref,  # (1, chunk, n)
+    y_ref,  # (1, chunk, 1, p)  intra-chunk output
+    s_ref,  # (1, 1, 1, p, n)   chunk state contribution
+    *,
+    chunk: int,
+):
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (q, p)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (q,)
+    cum = cum_ref[0, :, 0].astype(jnp.float32)  # (q,)
+    B = b_ref[0].astype(jnp.float32)  # (q, n)
+    C = c_ref[0].astype(jnp.float32)  # (q, n)
+
+    # decay matrix L[t,s] = exp(cum_t - cum_s) for s <= t
+    diff = cum[:, None] - cum[None, :]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(si <= ti, jnp.exp(diff), 0.0)
+
+    CB = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (q, q)
+    M = CB * L * dt[None, :]
+    y = jax.lax.dot_general(
+        M, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (q, p)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state contribution: S = sum_s exp(cum_last - cum_s) dt_s x_s ⊗ B_s
+    w = jnp.exp(cum[-1] - cum) * dt  # (q,)
+    xw = x * w[:, None]  # (q, p)
+    S = jax.lax.dot_general(
+        xw, B, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (p, n)
+    s_ref[0, 0, 0] = S.astype(s_ref.dtype)
+
+
+def ssd_intra_chunk_pallas(
+    x: jax.Array,  # (b, s, h, p)
+    dt: jax.Array,  # (b, s, h) float32
+    cum: jax.Array,  # (b, s, h) float32 within-chunk cumsum of dt*A
+    B: jax.Array,  # (b, s, n) float32
+    C: jax.Array,  # (b, s, n) float32
+    chunk: int,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y_intra (b,s,h,p) f32, S (b,nc,h,p,n) f32)."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    assert s % chunk == 0
+    nc = s // chunk
+    grid = (b, h, nc)
+
+    kernel = functools.partial(_ssd_chunk_kernel, chunk=chunk)
+    y, S = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, 1, p, n), lambda bi, hi, ci: (bi, ci, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, p), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel"),
+        ),
+        interpret=interpret,
+    )(x, dt, cum, B, C)
+    return y, S

@@ -1,0 +1,25 @@
+from repro.models.model import (
+    init_params,
+    abstract_params,
+    param_logical_axes,
+    forward,
+    loss_fn,
+    init_cache,
+    abstract_cache,
+    decode_step,
+    input_specs,
+    analytic_param_count,
+)
+
+__all__ = [
+    "init_params",
+    "abstract_params",
+    "param_logical_axes",
+    "forward",
+    "loss_fn",
+    "init_cache",
+    "abstract_cache",
+    "decode_step",
+    "input_specs",
+    "analytic_param_count",
+]

@@ -1,0 +1,92 @@
+"""Mixture-of-Experts MLP with capacity-based GShard-style dispatch.
+
+Expert weights are stacked on a leading ``expert`` logical axis so they are
+(a) shardable over a mesh axis (EP) and (b) first-class tensors in the
+Abstract Resource View — EP reshaping (App. A.2.3 of the paper) migrates
+slices of these tensors like any other.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import shard_hints
+from repro.models.layers import _dense_init, _act, mlp_init, mlp_apply
+
+
+def moe_init(rng, cfg: ModelConfig, dtype) -> tuple[dict, dict]:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.d_ff
+    keys = jax.random.split(rng, 5)
+    params = {
+        "router": _dense_init(keys[0], (d, e), dtype),
+        "wi_gate": _dense_init(keys[1], (e, d, f), dtype, in_axis=1),
+        "wi_up": _dense_init(keys[2], (e, d, f), dtype, in_axis=1),
+        "wo": _dense_init(keys[3], (e, f, d), dtype, in_axis=1),
+    }
+    axes = {
+        "router": ("embed", "expert_in"),
+        "wi_gate": ("expert", "embed", "ffn"),
+        "wi_up": ("expert", "embed", "ffn"),
+        "wo": ("expert", "ffn", "embed"),
+    }
+    if cfg.moe_shared_expert:
+        sp, sa = mlp_init(keys[4], cfg, dtype)
+        params["shared"] = sp
+        axes["shared"] = sa
+    return params, axes
+
+
+def moe_apply(
+    params: dict,
+    cfg: ModelConfig,
+    x: jax.Array,  # (b, s, d)
+) -> jax.Array:
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    capacity = max(1, int(cfg.moe_capacity_factor * k * s / e))
+
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)  # (b,s,e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)  # (b,s,k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, choice) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.float32)  # (b,s,k,e)
+    flat = onehot.reshape(b, s * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(b, s, k, e)
+    pos = jnp.einsum("bske,bske->bsk", pos_in_expert, onehot)  # (b,s,k)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # dispatch/combine tensors (b, s, e, c)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), capacity, dtype=jnp.float32)
+    dispatch = jnp.einsum("bske,bskc->bsec", onehot, pos_oh * keep[..., None])
+    combine = jnp.einsum("bsk,bske,bskc->bsec", gate_vals, onehot, pos_oh)
+
+    dispatch = shard_hints.constrain(dispatch, "moe_dispatch")
+    combine = shard_hints.constrain(combine, "moe_dispatch")
+    xin = jnp.einsum("bsec,bsd->ebcd", dispatch.astype(x.dtype), x)  # (e,b,c,d)
+    xin = shard_hints.constrain(xin, "moe_expert_in")
+    gate = _act(cfg.act, jnp.einsum("ebcd,edf->ebcf", xin, params["wi_gate"].astype(x.dtype)))
+    up = jnp.einsum("ebcd,edf->ebcf", xin, params["wi_up"].astype(x.dtype))
+    gate = shard_hints.constrain(gate, "moe_expert_mid")
+    yout = jnp.einsum("ebcf,efd->ebcd", gate * up, params["wo"].astype(x.dtype))
+    yout = shard_hints.constrain(yout, "moe_expert_in")
+    y = jnp.einsum("bsec,ebcd->bsd", combine.astype(x.dtype), yout)
+
+    if cfg.moe_shared_expert:
+        y = y + mlp_apply(params["shared"], x, cfg.act)
+    return y
+
+
+def moe_aux_loss(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Load-balancing auxiliary loss (Switch-style)."""
+    logits = (x @ params["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (b,s,e)
+    e = cfg.num_experts
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top1, e, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    return e * jnp.sum(frac_tokens * frac_probs)

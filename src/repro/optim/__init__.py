@@ -1,0 +1,17 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cosine_lr,
+    global_norm,
+    optimizer_logical_axes,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "adamw_init",
+    "adamw_update",
+    "cosine_lr",
+    "global_norm",
+    "optimizer_logical_axes",
+]

@@ -1,0 +1,20 @@
+from repro.sim.des import Simulator
+from repro.sim.cluster import ClusterModel, PAPER_TESTBED, TPU_V5E_POD
+from repro.sim.liver_sim import (
+    reconfig_downtime,
+    volatility_run,
+    SystemKind,
+)
+from repro.sim.volatility import make_trace, REGIMES
+
+__all__ = [
+    "Simulator",
+    "ClusterModel",
+    "PAPER_TESTBED",
+    "TPU_V5E_POD",
+    "reconfig_downtime",
+    "volatility_run",
+    "SystemKind",
+    "make_trace",
+    "REGIMES",
+]

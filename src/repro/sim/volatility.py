@@ -1,0 +1,42 @@
+"""Volatility trace generation (paper §6.4 regimes, §6.5 24-h trace).
+
+Deterministic (seeded) so benchmark outputs are reproducible.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+REGIMES = {
+    "low": 60 * 60.0,  # ~hourly events
+    "medium": 30 * 60.0,
+    "high": 10 * 60.0,
+}
+
+
+def make_trace(
+    duration_s: float,
+    mean_interval_s: float,
+    world_choices: tuple[int, ...] = (16, 24, 32),
+    seed: int = 0,
+) -> list[tuple[float, int]]:
+    """Poisson-ish arrival of resize events with jittered intervals."""
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out: list[tuple[float, int]] = []
+    world = world_choices[-1]
+    while True:
+        t += rng.uniform(0.5, 1.5) * mean_interval_s
+        if t >= duration_s:
+            break
+        choices = [w for w in world_choices if w != world]
+        world = int(rng.choice(choices))
+        out.append((t, world))
+    return out
+
+
+def paper_24h_trace(seed: int = 1) -> list[tuple[float, int]]:
+    """~47 events over 24 h (paper Fig. 8: GPT-14B, 32 GPUs, 47 reconfigs)."""
+    duration = 24 * 3600.0
+    trace = make_trace(duration, duration / 48.0, seed=seed)
+    return trace[:47]

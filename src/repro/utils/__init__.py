@@ -1,0 +1,18 @@
+from repro.utils.pytree import (
+    axes_paths,
+    tree_paths,
+    tree_bytes,
+    tree_param_count,
+    path_str,
+)
+from repro.utils.timing import Timer, now
+
+__all__ = [
+    "axes_paths",
+    "tree_paths",
+    "tree_bytes",
+    "tree_param_count",
+    "path_str",
+    "Timer",
+    "now",
+]

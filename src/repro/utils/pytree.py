@@ -1,0 +1,70 @@
+"""Pytree helpers shared across the framework.
+
+We use plain nested dicts of jnp arrays as parameter containers (no flax).
+Leaf naming follows ``a/b/c`` path strings derived from jax.tree_util key
+paths; these names are the identities used by the Abstract Resource View,
+the checkpoint manifests and the sharding rules.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+
+def path_str(key_path) -> str:
+    """Render a jax.tree_util key path as 'a/b/c'."""
+    parts = []
+    for k in key_path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(str(k.name))
+        else:  # pragma: no cover - future key kinds
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def tree_paths(tree: Any, is_leaf=None) -> dict[str, Any]:
+    """Flatten a pytree into {path_string: leaf}."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+    return {path_str(kp): leaf for kp, leaf in flat}
+
+
+def axes_paths(axes_tree: Any) -> dict[str, tuple]:
+    """Flatten a logical-axes tree (tuple leaves) into {path: axes tuple}."""
+    return tree_paths(axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def tree_from_paths(paths: dict[str, Any], like: Any) -> Any:
+    """Rebuild a pytree with the same structure as ``like`` from a path map."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = [paths[path_str(kp)] for kp, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def tree_map_with_path(fn: Callable[[str, Any], Any], tree: Any) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: fn(path_str(kp), leaf), tree
+    )
+
+
+def _leaf_size_bytes(leaf: Any) -> int:
+    shape = getattr(leaf, "shape", ())
+    dtype = getattr(leaf, "dtype", np.dtype("float32"))
+    return int(math.prod(shape)) * np.dtype(dtype).itemsize
+
+
+def tree_bytes(tree: Any) -> int:
+    return sum(_leaf_size_bytes(l) for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_param_count(tree: Any) -> int:
+    return sum(
+        int(math.prod(getattr(l, "shape", ()))) for l in jax.tree_util.tree_leaves(tree)
+    )

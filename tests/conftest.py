@@ -1,0 +1,44 @@
+"""Shared test helpers.
+
+NOTE: XLA_FLAGS / host-device-count is deliberately NOT set here — in-process
+tests see the real single CPU device. Tests that need a multi-device mesh
+spawn a subprocess via ``run_with_devices`` so the 512-device dry-run
+environment never leaks into the default test session.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 900) -> str:
+    """Run a python snippet in a subprocess with N host platform devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+    )
+    if r.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={r.returncode})\nstdout:\n{r.stdout[-3000:]}"
+            f"\nstderr:\n{r.stderr[-3000:]}"
+        )
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_with_devices

@@ -1,0 +1,167 @@
+"""End-to-end live reconfiguration on multi-device meshes (subprocess with 8
+host devices): the paper's §6.6 parity experiment, invariant I1 (training
+continues during prepare), fail-stop fallback (I4), and resize cancellation.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+
+def test_live_reshape_parity_and_overlap(subproc):
+    out = subproc(
+        """
+        import time, jax, numpy as np
+        import jax.tree_util as jtu
+        from repro.configs import get_config
+        from repro.configs.base import ParallelConfig
+        from repro.core.controller import LiveRController
+        from repro.optim import AdamWConfig
+
+        cfg = get_config("qwen3-1.7b").reduced()
+        opt = AdamWConfig(learning_rate=1e-3, warmup_steps=5)
+        ctrl = LiveRController(cfg, ParallelConfig(dp=2, tp=2), opt,
+                               seq_len=32, global_batch=8)
+        losses = ctrl.train_steps(3)
+        ctrl.request_resize(ParallelConfig(dp=2, tp=4))
+        t0 = time.time(); steps_during = 0
+        while not ctrl.records and time.time() - t0 < 420:
+            losses += ctrl.train_steps(1); steps_during += 1
+        assert ctrl.records, "switch never happened"
+        rec = ctrl.records[0]
+        assert steps_during > 0, "no overlap: training was blocked (I1 violated)"
+        assert ctrl.world.parallel.tp == 4
+        assert rec.total_pause_s < rec.prepare_s, "pause should be << prepare"
+        assert rec.switch_s < 0.5
+        losses += ctrl.train_steps(3)
+
+        ctrl2 = LiveRController(cfg, ParallelConfig(dp=2, tp=2), opt,
+                                seq_len=32, global_batch=8)
+        l_ref = ctrl2.train_steps(len(losses))
+        ref = ctrl2.gathered_params(); now = ctrl.gathered_params()
+        md = max(jtu.tree_leaves(jtu.tree_map(
+            lambda a, b: float(np.abs(a - b).max()), now, ref)))
+        assert md < 1e-5, f"param divergence {md}"
+        print("PARITY_OK steps_during=%d pause=%.3fs" %
+              (steps_during, rec.total_pause_s))
+        """,
+        n_devices=8,
+    )
+    assert "PARITY_OK" in out
+
+
+def test_scale_in_and_machine_states(subproc):
+    out = subproc(
+        """
+        import time
+        from repro.configs import get_config
+        from repro.configs.base import ParallelConfig
+        from repro.core.controller import LiveRController
+        from repro.core.generations import GenState
+        from repro.optim import AdamWConfig
+
+        cfg = get_config("mamba2-2.7b").reduced()
+        ctrl = LiveRController(cfg, ParallelConfig(dp=2, tp=2),
+                               AdamWConfig(), seq_len=16, global_batch=4)
+        ctrl.train_steps(2)
+        ctrl.request_resize(ParallelConfig(dp=1, tp=2))  # scale-in 4 -> 2
+        t0 = time.time()
+        while not ctrl.records and time.time() - t0 < 420:
+            ctrl.train_steps(1)
+        assert ctrl.records and ctrl.world.parallel.world_size == 2
+        assert ctrl.machine.state is GenState.STABLE
+        hist = [s for s, _ in ctrl.machine.history]
+        for phase in ("prepare", "ready", "switch", "cleanup", "stable"):
+            assert phase in hist
+        ctrl.train_steps(2)
+        print("SCALE_IN_OK")
+        """,
+        n_devices=8,
+    )
+    assert "SCALE_IN_OK" in out
+
+
+def test_failstop_fallback_checkpoint(subproc):
+    out = subproc(
+        """
+        import tempfile, time
+        from repro.configs import get_config
+        from repro.configs.base import ParallelConfig
+        from repro.core.controller import LiveRController
+        from repro.optim import AdamWConfig
+
+        cfg = get_config("qwen3-1.7b").reduced()
+        ckpt = tempfile.mkdtemp()
+        ctrl = LiveRController(cfg, ParallelConfig(dp=2, tp=2), AdamWConfig(),
+                               seq_len=16, global_batch=4,
+                               ckpt_dir=ckpt, ckpt_interval=4)
+        ctrl.train_steps(9)   # checkpoints at 4 and 8
+        step_before = ctrl.step
+        rec = ctrl.fail_stop_recover(ParallelConfig(dp=1, tp=2))
+        assert rec.mode == "fallback"
+        assert ctrl.step == 8, f"resumed at {ctrl.step}, expected ckpt step 8"
+        assert ctrl.world.parallel.world_size == 2
+        ctrl.train_steps(2)
+        print("FALLBACK_OK resumed=%d" % ctrl.step)
+        """,
+        n_devices=8,
+    )
+    assert "FALLBACK_OK" in out
+
+
+def test_cancel_stale_target(subproc):
+    out = subproc(
+        """
+        import time
+        from repro.configs import get_config
+        from repro.configs.base import ParallelConfig
+        from repro.core.controller import LiveRController
+        from repro.core.generations import GenState
+        from repro.optim import AdamWConfig
+
+        cfg = get_config("qwen3-1.7b").reduced()
+        ctrl = LiveRController(cfg, ParallelConfig(dp=2, tp=2), AdamWConfig(),
+                               seq_len=16, global_batch=4)
+        ctrl.request_resize(ParallelConfig(dp=2, tp=4))
+        ctrl.cancel_resize()   # target became stale (paper §7)
+        assert ctrl.machine.state is GenState.STABLE
+        # a fresh resize still works afterwards
+        ctrl.request_resize(ParallelConfig(dp=1, tp=4))
+        t0 = time.time()
+        while not ctrl.records and time.time() - t0 < 420:
+            ctrl.train_steps(1)
+        assert ctrl.world.parallel.describe() == "dp1xpp1xtp4"
+        print("CANCEL_OK")
+        """,
+        n_devices=8,
+    )
+    assert "CANCEL_OK" in out
+
+
+def test_live_reshape_with_optimized_sharding_hints(subproc):
+    """The beyond-paper sharding hints (EXPERIMENTS §Perf) compose with the
+    live reconfiguration path: resize under hint_version=v2."""
+    out = subproc(
+        """
+        import time
+        from repro.configs import get_config
+        from repro.configs.base import ParallelConfig
+        from repro.core.controller import LiveRController
+        from repro.optim import AdamWConfig
+
+        cfg = get_config("qwen3-1.7b").reduced()
+        ctrl = LiveRController(cfg, ParallelConfig(dp=2, tp=2), AdamWConfig(),
+                               seq_len=32, global_batch=8, hint_version="v2")
+        l0 = ctrl.train_steps(3)
+        ctrl.request_resize(ParallelConfig(dp=1, tp=4))
+        t0 = time.time()
+        while not ctrl.records and time.time() - t0 < 420:
+            l0 += ctrl.train_steps(1)
+        assert ctrl.records and ctrl.world.parallel.tp == 4
+        l1 = ctrl.train_steps(3)
+        assert all(x == x for x in l1), "NaN loss after hinted reshape"
+        print("HINTED_RESHAPE_OK")
+        """,
+        n_devices=8,
+    )
+    assert "HINTED_RESHAPE_OK" in out

@@ -1,0 +1,95 @@
+"""Generation state machine invariants (paper §4.5.1, Fig. 4)."""
+
+import threading
+
+import pytest
+
+from repro.core.generations import (
+    GenerationMachine,
+    GenState,
+    InvalidTransition,
+    StaleGeneration,
+)
+
+
+def test_full_lifecycle():
+    m = GenerationMachine()
+    assert m.state is GenState.STABLE
+    g = m.begin_prepare("tp4")
+    assert m.state is GenState.PREPARE
+    assert m.generations_alive() == 2
+    m.mark_ready(g.gen_id, payload="world")
+    assert m.state is GenState.READY
+    m.begin_switch(g.gen_id)
+    old = m.commit_switch(g.gen_id)
+    assert m.state is GenState.CLEANUP
+    assert m.active.gen_id == g.gen_id
+    assert old.gen_id == 0
+    m.finish_cleanup()
+    assert m.state is GenState.STABLE
+    assert m.generations_alive() == 1
+
+
+def test_monotonic_generation_ids():
+    m = GenerationMachine()
+    ids = []
+    for _ in range(3):
+        g = m.begin_prepare()
+        ids.append(g.gen_id)
+        m.mark_ready(g.gen_id)
+        m.begin_switch(g.gen_id)
+        m.commit_switch(g.gen_id)
+        m.finish_cleanup()
+    assert ids == sorted(ids)
+    assert len(set(ids)) == 3
+
+
+def test_at_most_two_generations():
+    m = GenerationMachine()
+    m.begin_prepare()
+    with pytest.raises(InvalidTransition):
+        m.begin_prepare()  # second shadow while one pending
+
+
+def test_stale_generation_rejected():
+    m = GenerationMachine()
+    g = m.begin_prepare()
+    with pytest.raises(StaleGeneration):
+        m.mark_ready(g.gen_id + 7)
+
+
+def test_cancel_pending_shadow():
+    """Target topology became stale before commit (paper §7)."""
+    m = GenerationMachine()
+    g = m.begin_prepare()
+    m.cancel()
+    assert m.state is GenState.STABLE
+    assert m.shadow is None
+    g2 = m.begin_prepare()
+    assert g2.gen_id > g.gen_id
+
+
+def test_invalid_commit_before_switch():
+    m = GenerationMachine()
+    g = m.begin_prepare()
+    m.mark_ready(g.gen_id)
+    with pytest.raises(InvalidTransition):
+        m.commit_switch(g.gen_id)
+
+
+def test_thread_safety_smoke():
+    m = GenerationMachine()
+    g = m.begin_prepare()
+    errs = []
+
+    def worker():
+        try:
+            m.mark_ready(g.gen_id, payload="w")
+        except Exception as e:  # only one thread may mark ready
+            errs.append(e)
+
+    ts = [threading.Thread(target=worker) for _ in range(4)]
+    [t.start() for t in ts]
+    [t.join() for t in ts]
+    assert m.state is GenState.READY
+    assert len(errs) == 3  # the other three hit InvalidTransition

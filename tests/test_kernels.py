@@ -1,0 +1,163 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracle, with
+shape/dtype sweeps (assignment requirement)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.reshard_pack import pack_rows_pallas, unpack_rows_pallas
+from repro.kernels.rmsnorm import rmsnorm_pallas
+from repro.kernels.ssd_scan import ssd_intra_chunk_pallas
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "b,s,h,kh,d,causal,window",
+    [
+        (1, 128, 2, 2, 64, True, 0),
+        (2, 256, 4, 2, 64, True, 0),
+        (2, 256, 4, 1, 32, True, 128),  # MQA + sliding window
+        (1, 128, 2, 2, 128, False, 0),
+        (1, 384, 6, 3, 64, True, 0),  # GQA rep=2, 3 blocks
+    ],
+)
+def test_flash_attention_sweep(b, s, h, kh, d, causal, window, dtype):
+    q, k, v = _rand((b, s, h, d), dtype), _rand((b, s, kh, d), dtype), _rand((b, s, kh, d), dtype)
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    tol = 2e-6 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(exp, np.float32), atol=tol, rtol=tol
+    )
+
+
+def test_flash_attention_cross_block_q_offset():
+    """t > s: right-aligned queries (continuation chunk)."""
+    q = _rand((1, 128, 2, 64))
+    k = _rand((1, 256, 2, 64))
+    v = _rand((1, 256, 2, 64))
+    out = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    exp = ref.flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "b,s,h,p,n,chunk",
+    [
+        (1, 64, 2, 16, 32, 16),
+        (2, 128, 3, 32, 64, 32),
+        (1, 96, 4, 64, 128, 16),  # jamba/mamba2-ish dims
+    ],
+)
+def test_ssd_intra_chunk_sweep(b, s, h, p, n, chunk):
+    x = _rand((b, s, h, p))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.3, (b, s, h)), jnp.float32)
+    A = -jnp.asarray(RNG.uniform(0.5, 2.0, (h,)), jnp.float32)
+    B = _rand((b, s, n))
+    C = _rand((b, s, n))
+
+    import os
+
+    os.environ["REPRO_FORCE_PALLAS_INTERPRET"] = "1"
+    try:
+        from repro.kernels import ops
+
+        y1, f1 = ops.ssd_scan(x, dt, A, B, C, chunk)
+    finally:
+        os.environ.pop("REPRO_FORCE_PALLAS_INTERPRET", None)
+    y2, f2 = ref.ssd_scan_ref(x, dt, A, B, C, chunk)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(f1), np.asarray(f2), atol=1e-5, rtol=1e-5)
+
+
+def test_ssd_matches_sequential_recurrence():
+    """Chunked SSD == naive per-token recurrence (ground truth)."""
+    b, s, h, p, n, chunk = 1, 32, 2, 8, 16, 8
+    x = np.asarray(_rand((b, s, h, p)))
+    dt = RNG.uniform(0.01, 0.3, (b, s, h)).astype(np.float32)
+    A = -RNG.uniform(0.5, 2.0, (h,)).astype(np.float32)
+    B = np.asarray(_rand((b, s, n)))
+    C = np.asarray(_rand((b, s, n)))
+
+    state = np.zeros((b, h, p, n), np.float32)
+    ys = np.zeros((b, s, h, p), np.float32)
+    for t in range(s):
+        decay = np.exp(dt[:, t] * A[None, :])  # (b,h)
+        state = decay[:, :, None, None] * state + (
+            dt[:, t][:, :, None, None]
+            * x[:, t][:, :, :, None]
+            * B[:, t][:, None, None, :]
+        )
+        ys[:, t] = np.einsum("bhpn,bn->bhp", state, C[:, t])
+
+    y, final = ref.ssd_scan_ref(
+        jnp.asarray(x), jnp.asarray(dt), jnp.asarray(A), jnp.asarray(B),
+        jnp.asarray(C), chunk,
+    )
+    np.testing.assert_allclose(np.asarray(y), ys, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(final), state, atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm / pack / unpack
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    rows=st.integers(1, 300),
+    d=st.sampled_from([128, 256]),
+)
+def test_rmsnorm_property(rows, d):
+    x = _rand((rows, d))
+    sc = _rand((d,))
+    out = rmsnorm_pallas(x, sc, interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.rmsnorm_ref(x, sc)), atol=1e-6
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_pack_unpack_roundtrip(data):
+    nb = data.draw(st.integers(1, 6))
+    block = data.draw(st.sampled_from([8, 16]))
+    R = block * data.draw(st.integers(nb, 12))
+    starts = data.draw(
+        st.lists(
+            st.integers(0, R // block - 1), min_size=nb, max_size=nb, unique=True
+        )
+    )
+    starts = jnp.asarray(sorted(s * block for s in starts), jnp.int32)
+    src = _rand((R, 128))
+    packed = pack_rows_pallas(src, starts, block, interpret=True)
+    np.testing.assert_array_equal(
+        np.asarray(packed), np.asarray(ref.pack_rows_ref(src, starts, block))
+    )
+    un = unpack_rows_pallas(packed, starts, block, R, interpret=True)
+    for st_ in np.asarray(starts):
+        np.testing.assert_array_equal(
+            np.asarray(un[st_ : st_ + block]), np.asarray(src[st_ : st_ + block])
+        )

@@ -1,0 +1,90 @@
+"""Optimizer + data-pipeline unit tests."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import SyntheticLM
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_lr, global_norm
+
+
+def test_adamw_reduces_quadratic():
+    cfg = AdamWConfig(learning_rate=0.1, warmup_steps=0, weight_decay=0.0,
+                      total_steps=200, min_lr_ratio=1.0)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt, m = adamw_update(cfg, grads, opt, params)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(learning_rate=1.0, warmup_steps=0, grad_clip=1.0)
+    params = {"w": jnp.zeros(4)}
+    opt = adamw_init(params)
+    grads = {"w": jnp.full(4, 1e6)}
+    _, _, m = adamw_update(cfg, grads, opt, params)
+    assert float(m["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(learning_rate=1.0, warmup_steps=10, total_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(cosine_lr(cfg, jnp.int32(s))) for s in range(0, 101, 10)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(1.0, rel=1e-3)
+    assert lrs[-1] == pytest.approx(0.1, rel=1e-2)
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[1:], lrs[2:]))
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert float(global_norm(t)) == pytest.approx(5.0)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline: determinism + elastic invariant
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic():
+    d1 = SyntheticLM(512, 32, 8, seed=7)
+    d2 = SyntheticLM(512, 32, 8, seed=7)
+    np.testing.assert_array_equal(d1.global_batch_at(3), d2.global_batch_at(3))
+    assert not np.array_equal(d1.global_batch_at(3), d1.global_batch_at(4))
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    dp_a=st.sampled_from([1, 2, 4, 8]),
+    dp_b=st.sampled_from([1, 2, 4, 8]),
+    step=st.integers(0, 50),
+)
+def test_elastic_resharding_invariant(dp_a, dp_b, step):
+    """The global token stream is identical under every DP decomposition —
+    the data-plane requirement for live reconfiguration."""
+    data = SyntheticLM(512, 16, 8, seed=1)
+    ga = np.concatenate([data.shard_at(step, r, dp_a) for r in range(dp_a)])
+    gb = np.concatenate([data.shard_at(step, r, dp_b) for r in range(dp_b)])
+    np.testing.assert_array_equal(ga, gb)
+    np.testing.assert_array_equal(ga, data.global_batch_at(step))
+
+
+def test_structured_mode_is_learnable():
+    """Markov structure => next token is predictable from current one."""
+    data = SyntheticLM(512, 64, 4, seed=0, mode="structured")
+    batch = data.global_batch_at(0)
+    # consecutive-token mapping should be highly concentrated
+    x, y = batch[:, :-1].ravel(), batch[:, 1:].ravel()
+    from collections import Counter, defaultdict
+
+    by_x = defaultdict(Counter)
+    for a, b in zip(x, y):
+        by_x[a][b] += 1
+    top1 = sum(c.most_common(1)[0][1] for c in by_x.values())
+    assert top1 / len(x) > 0.5

@@ -1,0 +1,111 @@
+"""Simulator: DES determinism, paper-parity checks (Table 1, Figs. 6–8
+bands), downtime monotonicity."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.sim.cluster import PAPER_TESTBED, TPU_V5E_POD, model_state_bytes
+from repro.sim.des import Simulator
+from repro.sim.liver_sim import SystemKind, reconfig_downtime, volatility_run
+from repro.sim.volatility import REGIMES, make_trace, paper_24h_trace
+
+
+def test_des_ordering_and_determinism():
+    sim = Simulator()
+    log = []
+    sim.schedule(2.0, log.append, "b")
+    sim.schedule(1.0, log.append, "a")
+    sim.schedule(2.0, log.append, "c")  # FIFO among equal timestamps
+
+    def proc():
+        yield 0.5
+        log.append("p1")
+        yield 1.0
+        log.append("p2")
+
+    sim.process(proc())
+    sim.run()
+    assert log == ["p1", "a", "p2", "b", "c"]
+    assert sim.now == 2.0
+
+
+def test_table1_breakdown_parity():
+    d = reconfig_downtime(SystemKind.MEGATRON_CKPT, PAPER_TESTBED, 20e9, 32, 32)
+    assert d.phases["ckpt_load"] == pytest.approx(54.6, abs=1.5)
+    init = d.phases["proc_spawn"] + d.phases["cuda_init"] + d.phases["dist_init"]
+    assert init == pytest.approx(70.1, abs=2.0)
+    assert d.total == pytest.approx(127.1, abs=3.0)
+
+
+def test_fig6a_speedup_band():
+    """Paper: 14x-23x over Megatron-LM Checkpoint; LiveR < ~8 s."""
+    for params in (1.7e9, 7e9, 14e9, 20e9, 30e9):
+        mk = reconfig_downtime(SystemKind.MEGATRON_CKPT, PAPER_TESTBED, params, 32, 32)
+        lv = reconfig_downtime(SystemKind.LIVER, PAPER_TESTBED, params, 32, 32)
+        speedup = mk.total / lv.total
+        assert 13.0 <= speedup <= 24.0, (params, speedup)
+        assert lv.total < 8.5
+        assert lv.phases["switch"] < 0.5
+
+
+def test_fig6b_storage_sensitivity():
+    """Checkpoint systems degrade sharply at low storage bw; LiveR does not."""
+    slow = reconfig_downtime(
+        SystemKind.MEGATRON_CKPT, PAPER_TESTBED, 14e9, 32, 32,
+        storage_bw_override=0.25,
+    )
+    fast = reconfig_downtime(
+        SystemKind.MEGATRON_CKPT, PAPER_TESTBED, 14e9, 32, 32,
+        storage_bw_override=2.0,
+    )
+    # paper reports >300 s at 0.25 Gb/s; with Table-1-exact calibration our
+    # model gives ~140 s — the 8x load-time degradation trend is what the
+    # figure demonstrates (absolute divergence noted in bench_storage).
+    assert slow.phases["ckpt_load"] > 100
+    assert slow.phases["ckpt_load"] / fast.phases["ckpt_load"] == pytest.approx(8.0, rel=0.01)
+    assert slow.total / fast.total > 2.2  # fixed init costs dampen the total
+    lv_slow = reconfig_downtime(
+        SystemKind.LIVER, PAPER_TESTBED, 14e9, 32, 32, storage_bw_override=0.25
+    )
+    lv_fast = reconfig_downtime(
+        SystemKind.LIVER, PAPER_TESTBED, 14e9, 32, 32, storage_bw_override=2.0
+    )
+    assert lv_slow.total == pytest.approx(lv_fast.total)  # storage-free
+
+
+def test_volatility_ordering():
+    for regime, interval in REGIMES.items():
+        tr = make_trace(8 * 3600, interval, seed=2)
+        g = {
+            k: volatility_run(k, PAPER_TESTBED, 14e9, tr, 8 * 3600, 32).goodput
+            for k in SystemKind
+        }
+        assert g[SystemKind.LIVER] > 0.985
+        assert g[SystemKind.LIVER] > g[SystemKind.UCP] >= g[SystemKind.MEGATRON_CKPT]
+
+
+def test_fig8_wasted_gpu_hours():
+    tr = paper_24h_trace()
+    r_m = volatility_run(SystemKind.MEGATRON_CKPT, PAPER_TESTBED, 14e9, tr, 24 * 3600, 32)
+    r_l = volatility_run(SystemKind.LIVER, PAPER_TESTBED, 14e9, tr, 24 * 3600, 32)
+    assert r_m.wasted_gpu_hours > 70  # paper: "80+ GPU-hours" (trace-seed dependent)
+    assert r_l.wasted_gpu_hours < 8  # paper: 4.1
+    assert r_m.reconfig_pause_s / max(r_l.reconfig_pause_s, 1e-9) > 10
+
+
+def test_downtime_monotone_in_model_size():
+    prev = 0.0
+    for params in (1e9, 5e9, 20e9, 70e9):
+        t = reconfig_downtime(SystemKind.LIVER, PAPER_TESTBED, params, 32, 32).total
+        assert t >= prev
+        prev = t
+
+
+def test_fig11_70b_1024gpu_extrapolation():
+    """Paper: ~565 s cold restart vs ~11 s LiveR at 70B/1024 GPUs (50x)."""
+    mk = reconfig_downtime(SystemKind.MEGATRON_CKPT, PAPER_TESTBED, 70e9, 1024, 1024)
+    lv = reconfig_downtime(SystemKind.LIVER, PAPER_TESTBED, 70e9, 1024, 1024)
+    assert 300 < mk.total < 900
+    assert lv.total < 15
+    assert mk.total / lv.total > 30

@@ -1,0 +1,100 @@
+"""System-level behaviour: the paper's three required properties hold
+end-to-end on the resource-view + planner + executor stack for a REAL model
+(reduced config), not toy tensors — reshaping (any TP/PP/DP), storage-free,
+bounded memory."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig
+from repro.core.intersection import plan_transfer, verify_completeness
+from repro.core.resource_view import build_tensor_specs, view_of
+from repro.core.streaming import (
+    allocate_destination,
+    execute_plan,
+    materialize_rank,
+)
+from repro.models.transformer import block_program
+
+
+@pytest.mark.parametrize(
+    "arch,ca,cb",
+    [
+        ("qwen3-1.7b", ParallelConfig(dp=2, pp=2, tp=2), ParallelConfig(dp=1, pp=4, tp=2)),
+        ("mixtral-8x7b", ParallelConfig(dp=2, tp=2, ep=2), ParallelConfig(dp=1, tp=2, ep=4)),
+        ("mamba2-2.7b", ParallelConfig(dp=1, pp=2, tp=4), ParallelConfig(dp=4, pp=1, tp=2)),
+        ("jamba-v0.1-52b", ParallelConfig(dp=2, pp=2, tp=2), ParallelConfig(dp=1, pp=1, tp=4)),
+    ],
+)
+def test_model_state_reshape_any_topology(arch, ca, cb):
+    """Real model state (params + AdamW moments) reshaped across arbitrary
+    TP/PP/DP/EP — bit-exact, bounded, storage-free."""
+    cfg = get_config(arch).reduced()
+    specs = build_tensor_specs(cfg, include_optimizer=True)
+    period = len(block_program(cfg))
+    plan = plan_transfer(specs, ca, cb, num_positions=period)
+    verify_completeness(specs, plan, cb)
+
+    rng = np.random.default_rng(0)
+    g = {s.name: rng.normal(size=s.shape).astype(s.dtype) for s in specs}
+    src = {r: materialize_rank(specs, ca, r, g) for r in range(ca.world_size)}
+    dst = {r: allocate_destination(specs, cb, r) for r in range(cb.world_size)}
+
+    budget = 1 << 20
+    stats = execute_plan(plan, src, dst, staging_bytes=budget)
+    stats.assert_bounded(budget)
+
+    for r in range(cb.world_size):
+        ref = materialize_rank(specs, cb, r, g)
+        for name, arr in ref.shards.items():
+            np.testing.assert_array_equal(arr, dst[r].shards[name])
+
+    # invariant I2: no rank ever held a full model replica
+    total = sum(a.nbytes for a in g.values())
+    for r, store in dst.items():
+        assert store.bytes() < total, "a rank materialized the full state"
+
+
+def test_plan_is_metadata_only_and_fast():
+    """Planning touches only sharding metadata (paper: <1 s for 175B/1024
+    ranks). Here: a full 52B-structure plan at 64->128 ranks, wall-bounded."""
+    import time
+
+    cfg = get_config("jamba-v0.1-52b")  # full config metadata, no arrays
+    specs = build_tensor_specs(cfg, include_optimizer=True)
+    ca = ParallelConfig(dp=4, pp=2, tp=8)
+    cb = ParallelConfig(dp=4, pp=4, tp=8)
+    t0 = time.perf_counter()
+    plan = plan_transfer(specs, ca, cb, layer_granular=False)
+    dt = time.perf_counter() - t0
+    assert len(plan.tasks) > 0
+    assert dt < 30, f"planning took {dt:.1f}s"
+
+
+def test_optimizer_state_travels_with_params():
+    cfg = get_config("qwen3-1.7b").reduced()
+    specs = build_tensor_specs(cfg, include_optimizer=True)
+    colls = {s.collection for s in specs}
+    assert colls == {"params", "mu", "nu"}
+    mu = [s for s in specs if s.collection == "mu"]
+    assert any("dp" in s.roles for s in mu), "ZeRO sharding missing on moments"
+
+
+def test_views_cover_tensors_exactly():
+    cfg = get_config("mixtral-8x7b").reduced()
+    specs = build_tensor_specs(cfg)
+    c = ParallelConfig(dp=2, pp=2, tp=2, ep=2)
+    for spec in specs:
+        seen = np.zeros(spec.shape, np.int32)
+        for r in range(c.world_size):
+            v = view_of(spec, c, r)
+            if v is None:
+                continue
+            sl = tuple(slice(lo, hi) for lo, hi in v.bounds)
+            seen[sl] += 1
+        # every element owned by >= 1 rank; sharded dims exactly once per
+        # replica group
+        assert (seen > 0).all(), spec.name

@@ -1,0 +1,63 @@
+"""Topology search (paper §2.3(D) integration: search chooses the target,
+LiveR executes the transition)."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig
+from repro.core.topology_search import best_target, feasible_configs, search
+
+
+def test_feasible_configs_respect_divisibility():
+    cfg = get_config("qwen3-1.7b")  # 28 periods
+    cands = feasible_configs(cfg, world=16, global_batch=32)
+    assert cands
+    for c in cands:
+        assert c.world_size == 16
+        assert 32 % c.dp == 0
+        assert 28 % c.pp == 0
+
+
+def test_search_returns_ranked_candidates():
+    cfg = get_config("qwen3-1.7b")
+    cands = search(cfg, world=16, global_batch=32, seq_len=1024)
+    assert cands == sorted(cands, key=lambda c: c.score)
+    assert all(c.mem_per_chip <= 16 * 1024**3 for c in cands)
+
+
+def test_memory_filter_excludes_undersharded():
+    """A 34B model cannot run dp-only on 16 v5e chips (10B/param state)."""
+    cfg = get_config("chameleon-34b")
+    cands = search(cfg, world=16, global_batch=32, seq_len=1024)
+    for c in cands:
+        assert c.parallel.tp * c.parallel.pp > 1, c
+
+
+def test_transition_aware_search_prefers_nearby_layouts():
+    """With transition cost dominating, the search must keep the current
+    layout (zero bytes moved); with zero weight it ranks purely by speed."""
+    cfg = get_config("qwen3-1.7b").reduced()
+    cur = ParallelConfig(dp=1, tp=4)
+    weighted = search(cfg, 4, 16, 128, current=cur, transition_weight=1.0)
+    assert weighted
+    assert weighted[0].parallel == cur
+    assert weighted[0].transition_bytes == 0
+    # other candidates move bytes
+    others = [c for c in weighted if c.parallel != cur]
+    assert all(c.transition_bytes > 0 for c in others)
+
+
+def test_best_target_integration_shape():
+    cfg = get_config("mixtral-8x7b")
+    t = best_target(cfg, world=64, global_batch=256, seq_len=4096)
+    assert t.world_size == 64
+
+
+def test_no_feasible_raises():
+    # world=13: dp=13 doesn't divide batch 16; pp=13 > max_pp and not a
+    # period divisor; tp=13 divides neither d_ff nor heads*head_dim
+    cfg = get_config("qwen3-1.7b")
+    with pytest.raises(ValueError):
+        best_target(cfg, world=13, global_batch=16, seq_len=128)
