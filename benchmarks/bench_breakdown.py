@@ -19,6 +19,11 @@ def main() -> None:
             + " (paper: transfer 2-4s @14B, switch <0.5s)",
         )
 
+    # host-measured commit-pause breakdown: stop-copy vs overlapped
+    # streaming of the SAME reshape (dp2xtp2 -> dp1xtp4). Overlapped mode
+    # pre-copies layers at iteration boundaries, re-syncs the dirty set
+    # under the final grad computation, and pays only the residual tail +
+    # grad-reshard + update + swap inside the pause.
     out = run_with_devices(
         """
         import time
@@ -28,21 +33,42 @@ def main() -> None:
         from repro.optim import AdamWConfig
 
         cfg = get_config("qwen3-1.7b").reduced()
-        ctrl = LiveRController(cfg, ParallelConfig(dp=2, tp=2), AdamWConfig(),
-                               seq_len=32, global_batch=8)
-        ctrl.train_steps(2)
-        ctrl.request_resize(ParallelConfig(dp=1, tp=4))
-        t0 = time.time()
-        while not ctrl.records and time.time() - t0 < 420:
-            ctrl.train_steps(1)
-        r = ctrl.records[0]
-        print(f"HOST drain={r.drain_s*1e3:.1f}ms transfer={r.transfer_s*1e3:.1f}ms "
-              f"switch={r.switch_s*1e3:.2f}ms total={r.total_pause_s*1e3:.1f}ms "
-              f"prepare_overlapped={r.prepare_s:.1f}s moved={r.moved_bytes/1e6:.1f}MB")
+        for mode in ("stop_copy", "stream"):
+            ctrl = LiveRController(cfg, ParallelConfig(dp=2, tp=2), AdamWConfig(),
+                                   seq_len=32, global_batch=8,
+                                   overlap=mode, stream_k=2)
+            ctrl.train_steps(2)
+            ctrl.request_resize(ParallelConfig(dp=1, tp=4))
+            t0 = time.time()
+            while not ctrl.records and time.time() - t0 < 420:
+                ctrl.train_steps(1)
+            r = ctrl.records[0]
+            print(f"HOST mode={mode} drain={r.drain_s*1e3:.1f}ms "
+                  f"transfer={r.transfer_s*1e3:.1f}ms update={r.update_s*1e3:.1f}ms "
+                  f"switch={r.switch_s*1e3:.2f}ms total_pause={r.total_pause_s*1e3:.1f}ms "
+                  f"precopy={r.precopy_s*1e3:.1f}ms resync={r.resync_s*1e3:.1f}ms "
+                  f"dirty={r.dirty_layers}/{r.layers_total} "
+                  f"prepare_overlapped={r.prepare_s:.1f}s moved={r.moved_bytes/1e6:.1f}MB")
+            print(f"PAUSE {mode} {r.total_pause_s:.6f}")
         """,
     )
-    line = [l for l in out.splitlines() if l.startswith("HOST")][0]
-    emit("fig6c/host_measured_reduced", 0.0, line.replace("HOST ", "").replace(" ", ";"))
+    pauses = {}
+    for l in out.splitlines():
+        if l.startswith("HOST mode="):
+            mode = l.split("mode=")[1].split()[0]
+            emit(f"fig6c/host_measured_{mode}", 0.0,
+                 l.replace("HOST ", "").replace(" ", ";"))
+        if l.startswith("PAUSE"):
+            _, mode, val = l.split()
+            pauses[mode] = float(val)
+    if len(pauses) == 2:
+        smaller = pauses["stream"] < pauses["stop_copy"]
+        emit(
+            "fig6c/overlap_vs_stopcopy", 0.0,
+            f"stop_copy={pauses['stop_copy']*1e3:.1f}ms;"
+            f"stream={pauses['stream']*1e3:.1f}ms;"
+            f"commit_pause_smaller_under_overlap={smaller}",
+        )
 
 
 if __name__ == "__main__":

@@ -33,6 +33,10 @@ def main() -> None:
             losses += ctrl.train_steps(1)
         post_params = ctrl.gathered_params()
         losses += ctrl.train_steps(4)
+        rec = ctrl.records[0]
+        print(f"PLANLIVE plan_net={rec.plan_network_bytes} "
+              f"plan_local={rec.plan_local_bytes} moved={rec.moved_bytes} "
+              f"executed={rec.executed_bytes} layers={rec.layers_total}")
 
         ctrl2 = LiveRController(cfg, ParallelConfig(dp=2, tp=2), opt,
                                 seq_len=32, global_batch=8)
@@ -52,6 +56,13 @@ def main() -> None:
         line.replace("PARITY ", "").replace(" ", ";")
         + " (paper: max deviation +-0.0 at bf16 print precision; reshard "
         "byte-movement itself is exactly lossless)",
+    )
+    pl = [l for l in out.splitlines() if l.startswith("PLANLIVE")][0]
+    emit(
+        "fig9/plan_vs_live_bytes", 0.0,
+        pl.replace("PLANLIVE ", "").replace(" ", ";")
+        + " (one ReshardEngine path: live transfer executed the "
+        "intersection plan's byte schedule)",
     )
 
 

@@ -1,4 +1,14 @@
 """repro: a JAX reproduction + extension of LiveR (live reconfiguration for
 elastic model training). See DESIGN.md for the system inventory."""
 
-__version__ = "1.0.0"
+import jax as _jax
+
+# Sharding-invariant RNG: with the legacy (non-partitionable) threefry
+# lowering, `jax.random.*` under jit(out_shardings=...) draws DIFFERENT
+# values depending on the mesh the output lands on — which silently breaks
+# every cross-world parity property this project is built on (a world
+# initialized under dp2xtp2 must equal one initialized under dp2xpp2xtp2).
+# Partitionable threefry is bit-deterministic regardless of partitioning.
+_jax.config.update("jax_threefry_partitionable", True)
+
+__version__ = "1.1.0"

@@ -2,8 +2,9 @@
 
   resource_view  — Abstract Resource View (logical tensors + view functions)
   intersection   — geometric intersection transfer planner (App. A.2)
-  streaming      — Algorithm 1 bounded-memory layer-streaming executor
-  reshard        — live-path resharder over jax.Arrays
+  streaming      — simulated-rank front-end over the shared ReshardEngine
+                   (repro.reshard — Algorithm 1 protocol + both backends)
+  reshard        — live-path resharder over jax.Arrays (same engine)
   generations    — Stable/Prepare/Ready/Switch/Cleanup state machine
   mock_groups    — abstract-mesh warmup (mock process groups)
   shadow         — background Shadow World construction
@@ -14,8 +15,17 @@
 
 from repro.core.resource_view import TensorSpec, View, build_tensor_specs, view_of
 from repro.core.intersection import TransferPlan, TransferTask, plan_transfer, verify_completeness
-from repro.core.streaming import execute_plan, materialize_rank, allocate_destination
 from repro.core.generations import GenerationMachine, GenState
+
+_STREAMING_NAMES = ("execute_plan", "materialize_rank", "allocate_destination")
+
+
+def __getattr__(name):  # lazy: streaming pulls in repro.reshard (the engine)
+    if name in _STREAMING_NAMES:
+        from repro.core import streaming
+
+        return getattr(streaming, name)
+    raise AttributeError(name)
 
 __all__ = [
     "TensorSpec", "View", "build_tensor_specs", "view_of",

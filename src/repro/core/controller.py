@@ -27,10 +27,19 @@ from repro.checkpoint import AsyncCheckpointer, load_checkpoint, save_checkpoint
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.core.downtime import GoodputLedger
 from repro.core.generations import GenerationMachine, GenState
-from repro.core.reshard import DEFAULT_STAGING_BYTES, live_reshard
+from repro.core.reshard import (
+    DEFAULT_STAGING_BYTES,
+    live_reshard,
+    live_reshard_planned,
+    named_state_leaves,
+    plan_state_transfer,
+    rebuild_state,
+)
 from repro.core.shadow import ShadowBuilder, WorldHandle, build_train_world
 from repro.data import SyntheticLM
 from repro.optim import AdamWConfig
+from repro.reshard import OverlapSession
+from repro.utils.pytree import tree_paths
 
 
 @dataclass
@@ -44,7 +53,20 @@ class ReconfigRecord:
     switch_s: float = 0.0
     total_pause_s: float = 0.0
     moved_bytes: int = 0
-    mode: str = "live"  # live | restart | ucp_restart | fallback
+    mode: str = "live"  # live | live_overlap | restart | ucp_restart | fallback
+    # plan-vs-live agreement (both sides from the one ReshardEngine path)
+    plan_network_bytes: int = 0
+    plan_local_bytes: int = 0
+    executed_bytes: int = 0
+    plan_s: float = 0.0  # planning time (0.0 when planned in the shadow thread)
+    # overlapped-streaming phases (zero under stop-copy)
+    precopy_s: float = 0.0
+    precopy_bytes: int = 0
+    resync_s: float = 0.0
+    resync_bytes: int = 0
+    update_s: float = 0.0
+    dirty_layers: int = 0
+    layers_total: int = 0
 
 
 class LiveRController:
@@ -64,6 +86,9 @@ class LiveRController:
         compression: str = "none",
         hint_version: str | None = None,
         seed: int = 0,
+        overlap: str = "stop_copy",  # "stop_copy" | "stream"
+        stream_k: int = 4,
+        source_policy: str = "nearest",
     ):
         self.cfg = cfg
         self.opt_cfg = opt_cfg
@@ -74,6 +99,17 @@ class LiveRController:
         self.microbatches = microbatches
         self.compression = compression
         self.hint_version = hint_version
+        assert overlap in ("stop_copy", "stream"), overlap
+        self.overlap = overlap
+        self.stream_k = stream_k
+        self.source_policy = source_policy
+        self._session: Optional[OverlapSession] = None
+        self._session_specs = None
+        self._session_plan = None
+        self._session_targets = None
+        self._pending_rec: Optional[ReconfigRecord] = None
+        self._commit_armed = False
+        self._grad_builder = None
         self.machine = GenerationMachine()
         self.ledger = GoodputLedger()
         self.records: list[ReconfigRecord] = []
@@ -114,8 +150,10 @@ class LiveRController:
         """Trigger: spawn Shadow World preparation. Non-blocking."""
         gen = self.machine.begin_prepare(description=target.describe())
 
+        src_parallel = self.world.parallel
+
         def build():
-            return build_train_world(
+            handle = build_train_world(
                 self.cfg,
                 target,
                 self.opt_cfg,
@@ -125,7 +163,19 @@ class LiveRController:
                 devices=self._device_subset(target),
                 compression=self.compression,
                 hint_version=self.hint_version,
+                split_step=self.overlap == "stream",
             )
+            # transfer planning is metadata-only — do it here, in the
+            # Prepare thread, so the commit pause never pays it (paper:
+            # planning runs during Prepare)
+            t0 = time.perf_counter()
+            specs, plan = plan_state_transfer(
+                self.cfg, src_parallel, target,
+                source_policy=self.source_policy,
+            )
+            handle.timings["plan_s"] = time.perf_counter() - t0
+            handle.plan_bundle = (src_parallel, specs, plan)
+            return handle
 
         self._builder = ShadowBuilder(build, gen.gen_id).start()
         return gen.gen_id
@@ -133,7 +183,7 @@ class LiveRController:
     def cancel_resize(self) -> None:
         """Target became stale before commit (paper §7): abandon shadow."""
         self.machine.cancel()
-        self._builder = None
+        self._reset_reconfig_state()
 
     # ------------------------------------------------------------------
     # Training loop with boundary polling
@@ -143,9 +193,15 @@ class LiveRController:
         for _ in range(n):
             t0 = time.perf_counter()
             batch = self._batch()
-            self.params, self.opt_state, metrics = self.world.step_fn(
-                self.params, self.opt_state, batch
-            )
+            if self._commit_armed:
+                # overlapped mode: this step runs split (grads on the old
+                # world overlapped with the dirty re-sync; optimizer update
+                # on the new world) and commits the switch at its end
+                metrics = self._split_step_commit(batch)
+            else:
+                self.params, self.opt_state, metrics = self.world.step_fn(
+                    self.params, self.opt_state, batch
+                )
             jax.block_until_ready(metrics["loss"])
             dt = time.perf_counter() - t0
             self.iteration_times.append(dt)
@@ -170,24 +226,180 @@ class LiveRController:
 
     def _poll_boundary(self) -> None:
         """Iteration boundary = the consistent cut (invariant I3)."""
-        if self._builder is not None and self._builder.ready:
-            if self.machine.state == GenState.PREPARE:
-                handle = self._builder.result()
-                self.machine.mark_ready(self._builder.gen_id, payload=handle)
-            if self.machine.state == GenState.READY:
-                self._commit_switch()
+        if self._builder is None or not self._builder.ready:
+            return
+        if self.machine.state == GenState.PREPARE:
+            handle = self._builder.result()
+            self.machine.mark_ready(self._builder.gen_id, payload=handle)
+        if self.machine.state != GenState.READY:
+            return
+        if self.overlap == "stop_copy":
+            self._commit_switch()
+            return
+        # overlapped streaming: pre-copy K layers per boundary while the
+        # Active World keeps training; once the plan is fully streamed,
+        # arm the split-step commit for the NEXT train step
+        if self._session is None:
+            self._start_overlap_session()
+        t0 = time.perf_counter()
+        named, _ = named_state_leaves(self.params, self.opt_state)
+        self._session.stream_next(named, self.step)
+        dt = time.perf_counter() - t0
+        self.ledger.record(t0, t0 + dt, "reshard_overlap",
+                           self.world.parallel.world_size)
+        if not self._session.done_precopy:
+            return
+        ready = self._grad_fn_ready()
+        if ready:
+            self._commit_armed = True
+        elif ready is None:
+            # split-step executables unavailable (compile failed): the
+            # reconfiguration still completes — degrade to stop-copy
+            self._commit_switch()
+
+    def _grad_fn_ready(self):
+        """True = armed, False = still compiling, None = compile failed."""
+        if self.world.grad_fn is not None:
+            return True
+        if self._grad_builder is None:
+            return False
+        th, holder = self._grad_builder
+        if th.is_alive():
+            return False
+        self._grad_builder = None
+        if "err" in holder:
+            import warnings
+
+            warnings.warn(
+                "split-step grad compile failed; falling back to stop-copy "
+                f"commit: {holder['err']!r}"
+            )
+            return None
+        self.world.grad_fn = holder["fn"]
+        return True
 
     # ------------------------------------------------------------------
-    # Switch (the only pause on the live path)
+    # Plan + target-sharding bookkeeping (computed once, at READY)
+    # ------------------------------------------------------------------
+    def _named_target_shardings(self, world: WorldHandle) -> dict:
+        ps, os_, _ = world.shardings
+        named = {}
+        for p, sh in tree_paths(ps).items():
+            named[f"params/{p}"] = sh
+        for coll in ("mu", "nu"):
+            for p, sh in tree_paths(os_[coll]).items():
+                named[f"{coll}/{p}"] = sh
+        return named
+
+    def _extra_shardings(self, world: WorldHandle) -> dict:
+        """Shardings for opt-state leaves outside the resource view
+        (step count, error-feedback buffers, ...)."""
+        _, os_, _ = world.shardings
+        return {k: v for k, v in os_.items() if k not in ("mu", "nu")}
+
+    def _ensure_plan(self, new_world: WorldHandle) -> None:
+        """Intersection plan for this reconfiguration. Normally precomputed
+        by the Prepare thread (request_resize); recomputed here — timed into
+        the record — only if the source layout changed since the request."""
+        if self._session_plan is not None:
+            return
+        bundle = new_world.plan_bundle
+        if bundle is not None and bundle[0] == self.world.parallel:
+            _, specs, plan = bundle
+            self._plan_seconds = 0.0
+        else:
+            t0 = time.perf_counter()
+            specs, plan = plan_state_transfer(
+                self.cfg,
+                self.world.parallel,
+                new_world.parallel,
+                source_policy=self.source_policy,
+            )
+            self._plan_seconds = time.perf_counter() - t0
+        self._session_specs = specs
+        self._session_plan = plan
+        self._session_targets = self._named_target_shardings(new_world)
+
+    def _start_overlap_session(self) -> None:
+        new_world: WorldHandle = self.machine.shadow.payload
+        self._ensure_plan(new_world)
+        self._session = OverlapSession(
+            self._session_specs,
+            self._session_plan,
+            {},  # sources provided per streaming round
+            self._session_targets,
+            self.staging_bytes,
+            stream_k=self.stream_k,
+        )
+        self._pending_rec = ReconfigRecord(
+            gen_id=self._builder.gen_id,
+            src=self.world.parallel.describe(),
+            dst=new_world.parallel.describe(),
+            prepare_s=new_world.timings.get("prepare_total_s", 0.0),
+            mode="live_overlap",
+            plan_s=self._plan_seconds,
+        )
+        # grads-only executable for the OLD world: compiled in a background
+        # thread so the training loop never stalls on XLA (the commit is
+        # simply not armed until it lands)
+        if self.world.grad_fn is None and self._grad_builder is None:
+            import threading
+
+            world = self.world
+            holder: dict = {}
+
+            def compile_grad():
+                try:
+                    holder["fn"] = self._compile_grad_fn(world)
+                except BaseException as e:  # surfaced at arm time
+                    holder["err"] = e
+
+            th = threading.Thread(target=compile_grad, daemon=True)
+            th.start()
+            self._grad_builder = (th, holder)
+
+    def _compile_grad_fn(self, world: WorldHandle):
+        from repro.distribution.step import jit_grad_step
+        from repro.models.model import abstract_params
+
+        jitted, _ = jit_grad_step(
+            self.cfg,
+            world.mesh,
+            self.global_batch,
+            microbatches=self.microbatches,
+            hint_version=self.hint_version,
+            parallel=world.parallel,
+        )
+        aparams = abstract_params(self.cfg)
+        abatch = {
+            "tokens": jax.ShapeDtypeStruct(
+                (self.global_batch, self.seq_len), jnp.int32
+            )
+        }
+        if self.cfg.family == "encdec":
+            abatch["frames"] = jax.ShapeDtypeStruct(
+                (self.global_batch, self.seq_len, self.cfg.d_model),
+                {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.cfg.dtype],
+            )
+        return jitted.lower(aparams, abatch).compile()
+
+    # ------------------------------------------------------------------
+    # Switch — stop-copy: the whole transfer inside the pause
     # ------------------------------------------------------------------
     def _commit_switch(self) -> None:
         gen_id = self._builder.gen_id
         new_world: WorldHandle = self.machine.shadow.payload
+        self._ensure_plan(new_world)
+        plan = self._session_plan
         rec = ReconfigRecord(
             gen_id=gen_id,
             src=self.world.parallel.describe(),
             dst=new_world.parallel.describe(),
             prepare_s=new_world.timings.get("prepare_total_s", 0.0),
+            plan_network_bytes=plan.network_bytes,
+            plan_local_bytes=plan.local_bytes,
+            layers_total=len(plan.layers()),
+            plan_s=self._plan_seconds,
         )
         pause_start = time.perf_counter()
         self.machine.begin_switch(gen_id)
@@ -197,17 +409,29 @@ class LiveRController:
         jax.block_until_ready((self.params, self.opt_state))
         rec.drain_s = time.perf_counter() - t0
 
-        # 2. streaming transfer: live reshard onto the new world
+        # 2. streaming transfer: the plan executed on live arrays through
+        # the shared engine (same protocol code as the sim oracle)
         t0 = time.perf_counter()
-        ps, os_, _ = new_world.shardings
-        self.params, rep_p = live_reshard(
-            self.params, ps, staging_bytes=self.staging_bytes
+        named, extras = named_state_leaves(self.params, self.opt_state)
+        moved, stats = live_reshard_planned(
+            self._session_specs,
+            plan,
+            named,
+            self._session_targets,
+            staging_bytes=self.staging_bytes,
         )
-        self.opt_state, rep_o = live_reshard(
-            self.opt_state, os_, staging_bytes=self.staging_bytes
+        new_extras, rep_x = live_reshard(
+            extras, self._extra_shardings(new_world),
+            staging_bytes=self.staging_bytes,
+        )
+        self.params, self.opt_state = rebuild_state(
+            moved, self.params, self.opt_state, new_extras
         )
         rec.transfer_s = time.perf_counter() - t0
-        rec.moved_bytes = rep_p.moved_bytes + rep_o.moved_bytes
+        rec.moved_bytes = (
+            stats.network_bytes + stats.local_bytes + rep_x.moved_bytes
+        )
+        rec.executed_bytes = stats.executed_bytes + rep_x.moved_bytes
 
         # 3. atomic switch: pointer swap of world references
         t0 = time.perf_counter()
@@ -222,12 +446,119 @@ class LiveRController:
             max(self.world.parallel.world_size, new_world.parallel.world_size),
         )
         self.records.append(rec)
-        self._builder = None
+        self._reset_reconfig_state()
 
-        # 4. cleanup (old world resources released; mesh handles are cheap
-        # in JAX — state arrays were donated during reshard)
+        # 4. cleanup (old world resources released; source arrays freed as
+        # the last references drop with the old generation)
         old.payload = None
         self.machine.finish_cleanup()
+
+    # ------------------------------------------------------------------
+    # Switch — overlapped: grads on the old world hide the dirty re-sync;
+    # the optimizer update lands directly on the new world
+    # ------------------------------------------------------------------
+    def _split_step_commit(self, batch) -> dict:
+        gen_id = self._builder.gen_id
+        new_world: WorldHandle = self.machine.shadow.payload
+        session = self._session
+        rec = self._pending_rec
+        plan = self._session_plan
+
+        # dispatch the final gradient computation on the OLD world (params
+        # are not donated: they are simultaneously the re-sync source)
+        t0 = time.perf_counter()
+        loss, grads = self.world.grad_fn(self.params, batch)
+
+        # overlapped with it: re-sync every dirty layer from this
+        # boundary's consistent cut, plus the non-resource-view leftovers
+        named, extras = named_state_leaves(self.params, self.opt_state)
+        session.resync(named, self.step)
+        new_extras, _ = live_reshard(
+            extras, self._extra_shardings(new_world),
+            staging_bytes=self.staging_bytes,
+        )
+        t1 = time.perf_counter()
+        jax.block_until_ready((loss, grads))
+        grad_tail_s = time.perf_counter() - t1  # residual wait past overlap
+
+        # ---- the commit pause: grad reshard + update + pointer swap ----
+        pause_start = time.perf_counter()
+        self.machine.begin_switch(gen_id)
+        t0 = time.perf_counter()
+        p_specs = [s for s in self._session_specs if s.collection == "params"]
+        from repro.core.intersection import TransferPlan
+
+        p_plan = TransferPlan(
+            tasks=[t for t in plan.tasks if t.collection == "params"],
+            cfg_src=plan.cfg_src,
+            cfg_dst=plan.cfg_dst,
+        )
+        g_named = {
+            f"params/{p}": leaf for p, leaf in tree_paths(grads).items()
+        }
+        g_targets = {
+            k: v for k, v in self._session_targets.items()
+            if k.startswith("params/")
+        }
+        g_moved, g_stats = live_reshard_planned(
+            p_specs, p_plan, g_named, g_targets,
+            staging_bytes=self.staging_bytes,
+        )
+        from repro.utils.pytree import tree_from_paths
+
+        grads_new = tree_from_paths(
+            {p: g_moved[f"params/{p}"] for p in tree_paths(grads)}, grads
+        )
+        rec.transfer_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        params_new, opt_new = rebuild_state(
+            session.results(), self.params, self.opt_state, new_extras
+        )
+        self.params, self.opt_state, om = new_world.update_fn(
+            grads_new, opt_new, params_new
+        )
+        jax.block_until_ready(self.params)
+        rec.update_s = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        old = self.machine.commit_switch(gen_id)
+        rec.switch_s = time.perf_counter() - t0
+        rec.total_pause_s = time.perf_counter() - pause_start
+
+        rep = session.report
+        rec.drain_s = grad_tail_s
+        rec.precopy_s = rep.precopy_seconds
+        rec.precopy_bytes = rep.precopy_bytes
+        rec.resync_s = rep.resync_seconds
+        rec.resync_bytes = rep.resync_bytes
+        rec.dirty_layers = rep.resync_layers
+        rec.layers_total = len(plan.layers())
+        rec.plan_network_bytes = plan.network_bytes
+        rec.plan_local_bytes = plan.local_bytes
+        rec.moved_bytes = rep.total_bytes + g_stats.network_bytes + g_stats.local_bytes
+        rec.executed_bytes = session.stats.executed_bytes + g_stats.executed_bytes
+        self.ledger.record(
+            pause_start, pause_start + rec.total_pause_s, "pause",
+            max(self.world.parallel.world_size, new_world.parallel.world_size),
+        )
+        self.records.append(rec)
+        self._reset_reconfig_state()
+
+        old.payload = None
+        self.machine.finish_cleanup()
+        return {"loss": loss, **om}
+
+    def _reset_reconfig_state(self) -> None:
+        self._builder = None
+        self._session = None
+        self._session_specs = None
+        self._session_plan = None
+        self._session_targets = None
+        self._pending_rec = None
+        self._commit_armed = False
+        self._grad_builder = None
+        self._plan_seconds = 0.0
 
     # ------------------------------------------------------------------
     # Fail-stop fallback (invariant I4) and restart baselines
@@ -255,7 +586,7 @@ class LiveRController:
                 residual = cand
         if self.machine.state in (GenState.PREPARE, GenState.READY):
             self.machine.cancel()
-        self._builder = None
+        self._reset_reconfig_state()
 
         t0 = time.perf_counter()
         world = residual or build_train_world(
@@ -267,12 +598,6 @@ class LiveRController:
 
         t0 = time.perf_counter()
         ps, os_, _ = world.shardings
-        like = {
-            "params": jax.tree_util.tree_map(
-                lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
-                jax.eval_shape(lambda: self.params),
-            ),
-        }
         state, step, load_s = load_checkpoint(
             self.ckpt_dir,
             like={"params": self.params, "opt": self.opt_state},

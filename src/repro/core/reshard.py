@@ -1,17 +1,27 @@
 """Live-path resharder over jax.Arrays (paper §4.6.2 on the live worlds).
 
-Moves the training state from the Active World's mesh/shardings to the
-Shadow World's, one leaf (layer) at a time, with donation — so peak extra
-device memory is bounded by the largest in-flight chunk rather than a second
-full state copy (invariant I2). Leaves exceeding the staging budget are
-streamed in sub-chunks along their largest dim, assembled into the
-(pre-required) destination storage — the jax.Array realization of
-Algorithm 1; byte-level semantics are validated against core/streaming.py.
+Both entry points execute a :class:`TransferPlan` through the shared
+:class:`~repro.reshard.engine.ReshardEngine` + LiveExecutor — the same
+protocol code the simulated-rank oracle runs, so chunking, staging bounds
+and byte accounting cannot diverge between the two paths:
 
-On TPU pods ``jax.device_put`` between shardings lowers to ICI DMA copies
-computed from exactly the kind of shard-intersection the planner emits; the
-plan (core/intersection.py) is still computed for byte accounting and for
-the scheduling benchmarks.
+  * :func:`live_reshard_planned` — the controller's path: an intersection
+    plan (core/intersection.py) computed from the model's resource view
+    drives layer-ordered streaming of named state collections.
+  * :func:`live_reshard` — plan-less pytree fallback (checkpoint resume,
+    ad-hoc relayouts): synthesizes a one-task-per-leaf plan (each leaf its
+    own streaming "layer") and runs the same engine, so oversized leaves
+    are chunked by the shared chunker rather than a private loop.
+
+Memory: the plan-less path with ``donate=True`` frees each source leaf as
+its layer lands, so peak stays ~1x state + staging (invariant I2). The
+plan-driven controller path keeps both worlds' storage resident until the
+pointer swap — that is the paper's Active/Shadow coexistence, and the
+destination storage is required for training regardless (Theorem 1,
+item 2); the *transfer* overhead beyond it is still bounded by the
+staging budget. On TPU pods the underlying ``device_put``/pack/unpack
+lower to ICI DMA copies computed from exactly the kind of
+shard-intersection the planner emits.
 """
 
 from __future__ import annotations
@@ -19,13 +29,31 @@ from __future__ import annotations
 import math
 import time
 from dataclasses import dataclass, field
-from typing import Any
+from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-DEFAULT_STAGING_BYTES = 512 * 1024 * 1024
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core.intersection import TransferPlan, TransferTask, plan_transfer
+from repro.core.resource_view import TensorSpec, build_tensor_specs
+from repro.reshard.engine import (
+    DEFAULT_STAGING_BYTES,
+    ReshardEngine,
+    StreamStats,
+)
+from repro.reshard.executors import LiveExecutor
+from repro.utils.pytree import tree_from_paths, tree_paths
+
+__all__ = [
+    "DEFAULT_STAGING_BYTES",
+    "ReshardReport",
+    "live_reshard",
+    "live_reshard_planned",
+    "named_state_leaves",
+    "plan_state_transfer",
+    "rebuild_state",
+]
 
 
 @dataclass
@@ -35,10 +63,16 @@ class ReshardReport:
     moved_bytes: int = 0
     seconds: float = 0.0
     max_inflight_bytes: int = 0
+    stats: Optional[StreamStats] = None
 
 
 def _leaf_bytes(x) -> int:
     return int(math.prod(x.shape)) * np.dtype(x.dtype).itemsize
+
+
+# ---------------------------------------------------------------------------
+# Plan-less pytree path (fallback: checkpoint resume, ad-hoc relayout)
+# ---------------------------------------------------------------------------
 
 
 def live_reshard(
@@ -49,77 +83,164 @@ def live_reshard(
 ) -> tuple[Any, ReshardReport]:
     """Reshard a pytree of jax.Arrays to new shardings, leaf-streamed.
 
-    Returns (new_state, report). Sources are deleted as soon as their leaf
-    lands (bounded memory); set donate=False to keep sources (fallback
-    safety: the Active World's storage must stay intact until commit —
-    invariant I4 — so the controller only donates after the switch point).
+    Returns (new_state, report). Leaves already laid out as requested are
+    passed through untouched (delta optimization). Each remaining leaf is
+    a one-task streaming layer of a synthetic plan; the shared engine
+    chunks oversized leaves to the staging budget. With ``donate=True``
+    (default) each source leaf's device buffers are freed as soon as its
+    layer lands — peak memory stays ~1x state + staging; the caller must
+    not touch the input tree again. ``donate=False`` keeps sources intact
+    (fallback safety: the Active World's storage must stay valid until
+    commit — invariant I4).
     """
     flat, treedef = jax.tree_util.tree_flatten(state)
     flat_sh = treedef.flatten_up_to(target_shardings)
     report = ReshardReport()
     t0 = time.perf_counter()
-    out = []
-    for leaf, sh in zip(flat, flat_sh):
-        nbytes = _leaf_bytes(leaf)
-        # delta optimization: identical sharding => zero-copy no-op task
-        if getattr(leaf, "sharding", None) == sh:
-            out.append(leaf)
-            report.leaves += 1
-            continue
-        if nbytes > staging_bytes and leaf.ndim >= 1 and leaf.shape[0] > 1:
-            new, inflight = _reshard_chunked(leaf, sh, staging_bytes)
-            report.chunked_leaves += 1
-        else:
-            # donate=True lets the runtime free/reuse source buffers safely
-            # (manual delete() would destroy buffers device_put aliased)
-            new = jax.device_put(leaf, sh, donate=donate)
-            inflight = nbytes
-        new.block_until_ready()
+
+    specs: list[TensorSpec] = []
+    tasks: list[TransferTask] = []
+    move_sh: dict[str, Any] = {}
+    out_leaves: dict[int, Any] = {}
+    for i, (leaf, sh) in enumerate(zip(flat, flat_sh)):
         report.leaves += 1
-        report.moved_bytes += nbytes
-        report.max_inflight_bytes = max(report.max_inflight_bytes, inflight)
-        out.append(new)
+        if getattr(leaf, "sharding", None) == sh:
+            out_leaves[i] = leaf  # delta optimization: zero-copy no-op
+            continue
+        name = f"leaf{i}"
+        shape = tuple(int(d) for d in leaf.shape)
+        nbytes = _leaf_bytes(leaf)
+        specs.append(
+            TensorSpec(
+                name=name,
+                shape=shape,
+                dtype=str(leaf.dtype),
+                roles=("none",) * len(shape),
+                stage_scope="all",
+                collection="state",
+            )
+        )
+        # src 0 -> dst 1: fictitious ranks; "non-local" so the engine runs
+        # the chunked staging path (rank identity is meaningless here)
+        tasks.append(
+            TransferTask(
+                tensor=name,
+                collection="state",
+                src_rank=0,
+                dst_rank=1,
+                bounds=tuple((0, d) for d in shape),
+                src_offset=(0,) * len(shape),
+                dst_offset=(0,) * len(shape),
+                nbytes=nbytes,
+                layer=i,  # one streaming layer per leaf
+            )
+        )
+        move_sh[name] = sh
+        if nbytes > staging_bytes and leaf.ndim >= 1 and shape[0] > 1:
+            report.chunked_leaves += 1
+
+    if tasks:
+        plan = TransferPlan(tasks=tasks, cfg_src=None, cfg_dst=None)
+        spec_map = {s.name: s for s in specs}
+        src = {t.tensor: flat[int(t.tensor[4:])] for t in tasks}
+        executor = LiveExecutor(
+            spec_map, src, move_sh, staging_bytes, free_sources=donate
+        )
+        engine = ReshardEngine(plan, executor, staging_bytes=staging_bytes)
+        stats = engine.run()
+        executor.block_until_ready()
+        for t in tasks:
+            out_leaves[int(t.tensor[4:])] = executor.results()[t.tensor]
+        report.moved_bytes += stats.network_bytes + stats.local_bytes
+        report.max_inflight_bytes = stats.peak_staging_bytes
+        report.stats = stats
+
     report.seconds = time.perf_counter() - t0
+    out = [out_leaves[i] for i in range(len(flat))]
     return jax.tree_util.tree_unflatten(treedef, out), report
 
 
-def _reshard_chunked(leaf, sharding, staging_bytes: int):
-    """Stream one oversized leaf through dim-0 chunks of ≤ staging bytes."""
-    n0 = leaf.shape[0]
-    per_row = _leaf_bytes(leaf) // n0
-    rows = max(1, staging_bytes // per_row)
+# ---------------------------------------------------------------------------
+# Plan-driven path (the controller's live transfer)
+# ---------------------------------------------------------------------------
 
-    # allocate destination storage directly with the target sharding
-    target = jax.jit(lambda: jnp.zeros(leaf.shape, leaf.dtype), out_shardings=sharding)()
 
-    update = jax.jit(
-        lambda tgt, chunk, start: jax.lax.dynamic_update_slice_in_dim(
-            tgt, chunk, start, axis=0
-        ),
-        donate_argnums=(0,),
-        out_shardings=sharding,
+def plan_state_transfer(
+    cfg: ModelConfig,
+    cfg_src: ParallelConfig,
+    cfg_dst: ParallelConfig,
+    source_policy: str = "nearest",
+) -> tuple[list[TensorSpec], TransferPlan]:
+    """Specs + intersection plan for the live training state.
+
+    ``zero_sharding=False``: the live runtime shards optimizer moments like
+    parameters (distribution/sharding.py), not ZeRO-split, so the plan's
+    byte accounting matches what actually moves.
+    """
+    from repro.models.transformer import block_program
+
+    specs = build_tensor_specs(cfg, include_optimizer=True, zero_sharding=False)
+    plan = plan_transfer(
+        specs,
+        cfg_src,
+        cfg_dst,
+        source_policy=source_policy,
+        layer_granular=True,
+        num_positions=len(block_program(cfg)),
     )
-    start = 0
-    max_inflight = 0
-    while start < n0:
-        end = min(start + rows, n0)
-        chunk = leaf[start:end]  # sliced on the source mesh
-        chunk = jax.device_put(chunk, _chunk_sharding(sharding))
-        target = update(target, chunk, start)
-        max_inflight = max(max_inflight, per_row * (end - start))
-        start = end
-    target.block_until_ready()
-    return target, max_inflight
+    return specs, plan
 
 
-def _chunk_sharding(sharding):
-    """Chunk rows move with the target's non-dim0 layout; dim0 unsharded
-    (chunks are smaller than the dim0 partition in general)."""
-    from jax.sharding import NamedSharding, PartitionSpec as P
+def named_state_leaves(params: Any, opt_state: Any) -> tuple[dict[str, Any], dict]:
+    """Flatten live training state into the resource view's tensor names.
 
-    if isinstance(sharding, NamedSharding):
-        spec = list(sharding.spec) if sharding.spec else []
-        if spec:
-            spec[0] = None
-        return NamedSharding(sharding.mesh, P(*spec))
-    return sharding
+    Returns (named leaves spanning params/mu/nu, leftovers) — leftovers
+    (step count, error-feedback buffers, …) are not in the resource view
+    and reshard through the plan-less fallback.
+    """
+    named: dict[str, Any] = {}
+    for path, leaf in tree_paths(params).items():
+        named[f"params/{path}"] = leaf
+    extras: dict = {}
+    for coll, sub in opt_state.items():
+        if coll in ("mu", "nu"):
+            for path, leaf in tree_paths(sub).items():
+                named[f"{coll}/{path}"] = leaf
+        else:
+            extras[coll] = sub
+    return named, extras
+
+
+def rebuild_state(
+    named: dict[str, Any], params_like: Any, opt_like: Any, extras: dict
+) -> tuple[Any, Any]:
+    """Inverse of named_state_leaves."""
+    p_paths = {p: named[f"params/{p}"] for p in tree_paths(params_like)}
+    params = tree_from_paths(p_paths, params_like)
+    opt: dict[str, Any] = {}
+    for coll, sub in opt_like.items():
+        if coll in ("mu", "nu"):
+            opt[coll] = tree_from_paths(
+                {p: named[f"{coll}/{p}"] for p in tree_paths(sub)}, sub
+            )
+        else:
+            opt[coll] = extras[coll]
+    return params, opt
+
+
+def live_reshard_planned(
+    specs: list[TensorSpec],
+    plan: TransferPlan,
+    named_leaves: dict[str, Any],
+    target_shardings: dict[str, Any],
+    staging_bytes: int = DEFAULT_STAGING_BYTES,
+    layers: Optional[list[int]] = None,
+) -> tuple[dict[str, Any], StreamStats]:
+    """Execute an intersection plan on live jax.Arrays via the shared
+    engine. Returns (destination leaves by tensor name, stats)."""
+    spec_map = {s.name: s for s in specs}
+    executor = LiveExecutor(spec_map, named_leaves, target_shardings, staging_bytes)
+    engine = ReshardEngine(plan, executor, staging_bytes=staging_bytes)
+    stats = engine.run(layers)
+    executor.block_until_ready()
+    return executor.results(), stats

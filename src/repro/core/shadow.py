@@ -39,6 +39,15 @@ class WorldHandle:
     shardings: Any  # (param_sh, opt_sh, batch_sh)
     gen_id: int = -1
     timings: dict = field(default_factory=dict)
+    # split-step commit executables (overlapped reconfiguration): the
+    # optimizer-only step for THIS world (compiled in the shadow thread so
+    # it never touches the critical path), and a grads-only step compiled
+    # on demand for the world being left.
+    update_fn: Optional[Callable] = None
+    grad_fn: Optional[Callable] = None
+    # (src ParallelConfig, specs, TransferPlan) computed during Prepare so
+    # the commit pause never pays the planning cost
+    plan_bundle: Any = None
 
 
 class ShadowBuilder:
@@ -93,6 +102,7 @@ def build_train_world(
     compression: str = "none",
     aot: bool = True,
     hint_version: str | None = None,
+    split_step: bool = False,
 ) -> WorldHandle:
     """Synchronous world construction (the shadow thread's body)."""
     import jax.numpy as jnp
@@ -146,10 +156,37 @@ def build_train_world(
         step_fn = lowered.compile()  # communicator-setup analogue
         timings["compile_s"] = time.perf_counter() - t0
 
+    update_fn = None
+    if split_step:
+        # optimizer-only executable for the split-step commit: compiled
+        # here, in the shadow thread, so the commit pause never pays it
+        from repro.distribution.step import jit_update_step
+
+        jitted_u, _ = jit_update_step(
+            cfg, mesh, opt_cfg, compression=compression, parallel=parallel
+        )
+        if aot:
+            aparams = abstract_params(cfg)
+            aopt = jax.eval_shape(lambda: adamw_init(aparams))
+            if compression == "int8_ef":
+                aopt = dict(aopt)
+                aopt["ef"] = jax.tree_util.tree_map(
+                    lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), aparams
+                )
+            agrads = jax.tree_util.tree_map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), aparams
+            )
+            t0 = time.perf_counter()
+            update_fn = jitted_u.lower(agrads, aopt, aparams).compile()
+            timings["update_compile_s"] = time.perf_counter() - t0
+        else:
+            update_fn = jitted_u
+
     return WorldHandle(
         parallel=parallel,
         mesh=mesh,
         step_fn=step_fn,
         shardings=shardings,
         timings=timings,
+        update_fn=update_fn,
     )

@@ -1,28 +1,44 @@
-"""Layer-Streaming Resharding executor (paper §4.6.2, Algorithm 1).
+"""Layer-Streaming Resharding — simulated-rank front-end (paper §4.6.2,
+Algorithm 1).
 
-A faithful multi-rank implementation of the protocol: transfers execute one
-layer at a time through a fixed-size staging buffer ``B``; the buffer is
-reused across layers; a barrier separates layers. Peak extra memory per rank
-is instrumented and *asserted* to stay ≤ B + metadata — the executable form
-of Theorem 1 (Bounded Memory During Resharding).
+The protocol itself (layer ordering, staging-budget chunking, Theorem 1
+accounting) lives in :mod:`repro.reshard.engine`; this module keeps the
+multi-rank simulation fixtures (``RankStore`` shard stores) and the
+historical ``execute_plan`` entry point, now a thin wrapper that runs the
+shared :class:`~repro.reshard.engine.ReshardEngine` with a
+:class:`~repro.reshard.executors.SimExecutor` — the same engine the live
+jax.Array path uses, so byte accounting agrees across backends by
+construction.
 
-Each simulated rank owns only its shard (``RankStore``); no full tensor is
-ever materialized. Used by the correctness/property tests, the byte-level
-benchmarks, and as the semantics reference for the live-path resharder
-(core/reshard.py).
+Each simulated rank owns only its shard; no full tensor is ever
+materialized. Used by the correctness/property tests and the byte-level
+benchmarks.
 """
 
 from __future__ import annotations
-
-from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.configs.base import ParallelConfig
 from repro.core.intersection import TransferPlan, TransferTask
 from repro.core.resource_view import TensorSpec, view_of
+from repro.reshard.chunking import chunk_task as _chunk_task  # legacy name
+from repro.reshard.engine import (
+    DEFAULT_STAGING_BYTES,
+    ReshardEngine,
+    StreamStats,
+)
+from repro.reshard.executors import SimExecutor
 
-DEFAULT_STAGING_BYTES = 512 * 1024 * 1024  # paper default B = 512 MB
+__all__ = [
+    "DEFAULT_STAGING_BYTES",
+    "RankStore",
+    "StreamStats",
+    "allocate_destination",
+    "execute_plan",
+    "materialize_rank",
+    "_chunk_task",
+]
 
 
 class RankStore:
@@ -69,63 +85,6 @@ def allocate_destination(
     return store
 
 
-@dataclass
-class StreamStats:
-    layers_streamed: int = 0
-    network_bytes: int = 0
-    local_bytes: int = 0
-    peak_staging_bytes: int = 0
-    barriers: int = 0
-    chunks: int = 0
-    per_layer_bytes: dict[int, int] = field(default_factory=dict)
-
-    def assert_bounded(self, budget: int) -> None:
-        assert self.peak_staging_bytes <= budget, (
-            f"staging {self.peak_staging_bytes} exceeded budget {budget} "
-            "(Theorem 1 violated)"
-        )
-
-
-def _chunk_task(task: TransferTask, budget: int) -> list[TransferTask]:
-    """Split a task whose payload exceeds the staging budget into sub-slices
-    along its largest dim (paper §5: fixed-size chunks, default 512 MB)."""
-    if task.nbytes <= budget:
-        return [task]
-    shape = task.shape()
-    d = int(np.argmax(shape))
-    per_row = task.nbytes // shape[d]
-    rows = max(1, budget // per_row)
-    out = []
-    lo, hi = task.bounds[d]
-    start = lo
-    while start < hi:
-        end = min(start + rows, hi)
-        bounds = list(task.bounds)
-        bounds[d] = (start, end)
-        frac = (end - start) / shape[d]
-        out.append(
-            TransferTask(
-                tensor=task.tensor,
-                collection=task.collection,
-                src_rank=task.src_rank,
-                dst_rank=task.dst_rank,
-                bounds=tuple(bounds),
-                src_offset=tuple(
-                    o + (start - lo if i == d else 0)
-                    for i, o in enumerate(task.src_offset)
-                ),
-                dst_offset=tuple(
-                    o + (start - lo if i == d else 0)
-                    for i, o in enumerate(task.dst_offset)
-                ),
-                nbytes=task.nbytes * (end - start) // shape[d],
-                layer=task.layer,
-            )
-        )
-        start = end
-    return out
-
-
 def execute_plan(
     plan: TransferPlan,
     src_stores: dict[int, RankStore],
@@ -133,52 +92,11 @@ def execute_plan(
     staging_bytes: int = DEFAULT_STAGING_BYTES,
     zero_copy_local: bool = True,
 ) -> StreamStats:
-    """Run Algorithm 1 over simulated ranks.
-
-    For each layer ℓ (ascending; -1 = non-layer state first): source ranks
-    "send" the planned slices; each destination rank receives them into its
-    staging buffer (≤ ``staging_bytes`` in flight, flushed by assembling
-    into the destination shard), then a barrier ends the layer.
-    """
-    stats = StreamStats()
-    layers = plan.layers()
-    for layer in layers:
-        tasks = plan.by_layer(layer)
-        # group by destination rank — each dst drains its own staging buffer
-        by_dst: dict[int, list[TransferTask]] = {}
-        for t in tasks:
-            by_dst.setdefault(t.dst_rank, []).append(t)
-        for dst_rank, dtasks in by_dst.items():
-            dst = dst_stores[dst_rank]
-            staging_used = 0
-            for task in dtasks:
-                if task.local and zero_copy_local:
-                    _apply_copy(src_stores[task.src_rank], dst, task)
-                    stats.local_bytes += task.nbytes
-                    continue
-                for chunk in _chunk_task(task, staging_bytes):
-                    stats.chunks += 1
-                    if staging_used + chunk.nbytes > staging_bytes:
-                        # flush: everything staged so far is assembled into
-                        # the destination shard; buffer is reused
-                        staging_used = 0
-                    staging_used += chunk.nbytes
-                    stats.peak_staging_bytes = max(
-                        stats.peak_staging_bytes, staging_used
-                    )
-                    _apply_copy(src_stores[chunk.src_rank], dst, chunk)
-                    stats.network_bytes += chunk.nbytes
-            stats.per_layer_bytes[layer] = (
-                stats.per_layer_bytes.get(layer, 0)
-                + sum(t.nbytes for t in dtasks)
-            )
-        stats.barriers += 1
-        stats.layers_streamed += 1
-    return stats
-
-
-def _apply_copy(src: RankStore, dst: RankStore, task: TransferTask) -> None:
-    shape = task.shape()
-    ssl = tuple(slice(o, o + s) for o, s in zip(task.src_offset, shape))
-    dsl = tuple(slice(o, o + s) for o, s in zip(task.dst_offset, shape))
-    dst.shards[task.tensor][dsl] = src.shards[task.tensor][ssl]
+    """Run Algorithm 1 over simulated ranks via the shared engine."""
+    engine = ReshardEngine(
+        plan,
+        SimExecutor(src_stores, dst_stores),
+        staging_bytes=staging_bytes,
+        zero_copy_local=zero_copy_local,
+    )
+    return engine.run()

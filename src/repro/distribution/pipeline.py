@@ -1,17 +1,28 @@
-"""Pipeline parallelism via shard_map over a ``pipe`` mesh axis.
+"""Pipeline parallelism as pure GSPMD over a ``pipe`` mesh axis.
 
-GPipe-schedule forward with `lax.ppermute` microbatch rotation; autodiff
-through the rotation yields the correct pipeline backward (transposed
-permutes). The ``pipe`` axis is *manual* (shard_map); ``data``/``model``
-axes stay automatic, so DP/TP compose with PP through GSPMD.
+GPipe-schedule forward with stage-stacked activation buffers: activations
+and token buffers carry an explicit leading *stage* axis of size ``pp``
+that is sharding-constrained onto the ``pipe`` mesh axis; the microbatch
+rotation is a ``jnp.roll`` along that axis, which GSPMD lowers to a
+collective-permute between stage groups. Autodiff through the roll yields
+the correct pipeline backward (the transposed permute). DP/TP compose
+through ordinary GSPMD propagation on the other mesh axes — no manual
+(shard_map) region is involved, so the step is a plain differentiable JAX
+function.
+
+(An earlier revision used a partially-manual ``shard_map`` over ``pipe``;
+jax 0.4.x cannot differentiate partially-auto shard_maps — scalar
+residuals break partial-eval and ``ppermute`` crashes the SPMD partitioner
+— and the pure-GSPMD formulation is equivalent math with strictly simpler
+machinery.)
 
 Stage layout: the stacked-periods axis of every block tensor is split
 contiguously across stages (requires n_periods % pp == 0) — the same
 geometry the Abstract Resource View assigns to the "pp" role, so PP
 reconfiguration streams whole period-slices between stages (paper
 App. A.2.3: "entire layers move; the intersection is the full tensor or
-empty"). Embedding/head are pipe-replicated here (compute gated to their
-owning stage); Megatron instead owns them on first/last stage — the
+empty"). Embedding/head are pipe-replicated here (loss terms masked to
+the owning stage); Megatron instead owns them on first/last stage — the
 resource view models that ownership, the trainer trades the memory for
 simplicity. MoE aux loss is not accumulated in the pipeline trainer.
 """
@@ -34,7 +45,7 @@ from repro.utils.pytree import axes_paths, tree_paths, tree_from_paths
 
 
 def pipeline_param_specs(cfg: ModelConfig, pp: int):
-    """PartitionSpecs over the pipe axis only (manual axis of shard_map)."""
+    """PartitionSpecs over the pipe axis (stacked-layer leaves only)."""
     from repro.models.model import abstract_params, param_logical_axes
 
     params = abstract_params(cfg)
@@ -50,28 +61,33 @@ def pipeline_param_specs(cfg: ModelConfig, pp: int):
     return tree_from_paths(out, params)
 
 
-def make_pipeline_loss(cfg: ModelConfig, parallel: ParallelConfig, microbatches: int):
-    """Loss over a pipelined forward; call under shard_map(axis 'pipe')."""
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def make_pipeline_loss(
+    cfg: ModelConfig,
+    parallel: ParallelConfig,
+    microbatches: int,
+    mesh: Mesh,
+):
+    """Loss over a pipelined forward — an ordinary differentiable function
+    (GSPMD handles all placement through sharding constraints)."""
     prog = block_program(cfg)
     np_ = n_periods(cfg)
     pp = parallel.pp
     assert np_ % pp == 0, f"n_periods {np_} must divide by pp {pp}"
     assert microbatches >= pp, "need microbatches >= pp to fill the pipeline"
+    per_stage = np_ // pp
+    dsz = _axis_size(mesh, "data")
 
-    def stage_forward(stage_blocks, x, positions):
-        def body(carry, period_params):
-            h = carry
-            for j, (mixer, mlp) in enumerate(prog):
-                h, _, _ = _block_apply_full(
-                    period_params[f"pos{j}"], cfg, mixer, mlp, h, positions, True
-                )
-            return h, None
-
-        x, _ = lax.scan(jax.checkpoint(body), x, stage_blocks)
-        return x
+    def buf_sharding(mb: int, extra_dims: int) -> NamedSharding:
+        # (pp, mb, ...): stage axis on "pipe"; microbatch on "data" when it
+        # divides, else replicated over data
+        bspec = "data" if dsz > 1 and mb % dsz == 0 else None
+        return NamedSharding(mesh, P("pipe", bspec, *([None] * extra_dims)))
 
     def pipe_loss(params, tokens):
-        stage = lax.axis_index("pipe")
         Bl, S = tokens.shape
         assert Bl % microbatches == 0, (Bl, microbatches)
         mb = Bl // microbatches
@@ -80,46 +96,105 @@ def make_pipeline_loss(cfg: ModelConfig, parallel: ParallelConfig, microbatches:
         adt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
         d = cfg.d_model
         T = microbatches + pp - 1
-        perm = [(i, (i + 1) % pp) for i in range(pp)]
+        x_sh = buf_sharding(mb, 2)
+        tok_sh = buf_sharding(mb, 1)
+
+        # stage-stack the block tensors: (np_, ...) -> (pp, per_stage, ...)
+        stage_blocks = jax.tree_util.tree_map(
+            lambda a: lax.with_sharding_constraint(
+                a.reshape((pp, per_stage) + a.shape[1:]),
+                NamedSharding(mesh, P("pipe")),
+            ),
+            params["blocks"],
+        )
+        stage_idx = jnp.arange(pp)
+
+        def stage_forward(blocks, x):
+            """One stage's periods over one microbatch (vmapped over pp)."""
+
+            def body(carry, period_params):
+                h = carry
+                for j, (mixer, mlp) in enumerate(prog):
+                    h, _, _ = _block_apply_full(
+                        period_params[f"pos{j}"], cfg, mixer, mlp, h, positions, True
+                    )
+                return h, None
+
+            x, _ = lax.scan(jax.checkpoint(body), x, blocks)
+            return x
+
+        vfwd = jax.vmap(stage_forward)
 
         def tick(carry, t):
-            x_prev, tok_prev, loss_acc = carry
+            x_buf, tok_buf, loss_acc = carry
             inject_idx = jnp.clip(t, 0, microbatches - 1)
             tok_inject = toks[inject_idx]
             x_inject = L.embed_apply(params["embed"], tok_inject, adt)
-            use_inject = (stage == 0) & (t < microbatches)
-            x_in = jnp.where(use_inject, x_inject, x_prev)
-            tok_in = jnp.where(use_inject, tok_inject, tok_prev)
-
-            y = stage_forward(params["blocks"], x_in, positions)
-
-            # NOTE: computed unconditionally and masked — a lax.cond here
-            # would put the TP all-reduce of the lm_head matmul inside a
-            # branch only last-stage devices take, deadlocking SPMD
-            # execution (collectives must be executed by every device).
-            h = L.rmsnorm_apply(params["final_norm"], y)
-            logits = L.lm_head_apply(params.get("lm_head"), params["embed"], h).astype(
-                jnp.float32
+            use_inject = t < microbatches
+            x_in = x_buf.at[0].set(jnp.where(use_inject, x_inject, x_buf[0]))
+            tok_in = tok_buf.at[0].set(
+                jnp.where(use_inject, tok_inject, tok_buf[0])
             )
-            lz = jax.scipy.special.logsumexp(logits[:, :-1], axis=-1)
-            tgt = jnp.take_along_axis(logits[:, :-1], tok_in[:, 1:, None], axis=-1)[
-                ..., 0
-            ]
-            mb_loss = (lz - tgt).mean()
-            is_out = (stage == pp - 1) & (t >= pp - 1)
-            loss_acc = loss_acc + jnp.where(is_out, mb_loss, 0.0)
+            x_in = lax.with_sharding_constraint(x_in, x_sh)
 
-            y_send = lax.ppermute(y, "pipe", perm)
-            tok_send = lax.ppermute(tok_in, "pipe", perm)
-            return (y_send, tok_send, loss_acc), None
+            y = vfwd(stage_blocks, x_in)  # (pp, mb, S, d)
+            y = lax.with_sharding_constraint(y, x_sh)
 
-        x0 = lax.pvary(jnp.zeros((mb, S, d), adt), ("pipe",))
-        tok0 = lax.pvary(jnp.zeros((mb, S), jnp.int32), ("pipe",))
-        loss0 = lax.pvary(jnp.float32(0.0), ("pipe",))
-        (xf, tokf, loss_sum), _ = lax.scan(tick, (x0, tok0, loss0), jnp.arange(T))
-        return lax.psum(loss_sum, "pipe") / microbatches
+            # per-stage CE, masked to the last stage in steady state. The
+            # head matmul runs per stage slice (one per pipe group — the
+            # same unconditional-compute-then-mask pattern a lax.cond would
+            # break by hiding the TP collective from non-last stages.
+            h = L.rmsnorm_apply(params["final_norm"], y)
+            logits = L.lm_head_apply(
+                params.get("lm_head"), params["embed"], h
+            ).astype(jnp.float32)
+            lz = jax.scipy.special.logsumexp(logits[:, :, :-1], axis=-1)
+            tgt = jnp.take_along_axis(
+                logits[:, :, :-1], tok_in[:, :, 1:, None], axis=-1
+            )[..., 0]
+            stage_loss = (lz - tgt).mean(axis=(1, 2))  # (pp,)
+            is_out = (stage_idx == pp - 1) & (t >= pp - 1)
+            loss_acc = loss_acc + jnp.sum(jnp.where(is_out, stage_loss, 0.0))
+
+            # rotate: stage s's output becomes stage s+1's input (GSPMD
+            # lowers the roll on the pipe-sharded axis to collective-permute)
+            x_send = lax.with_sharding_constraint(jnp.roll(y, 1, axis=0), x_sh)
+            tok_send = lax.with_sharding_constraint(
+                jnp.roll(tok_in, 1, axis=0), tok_sh
+            )
+            return (x_send, tok_send, loss_acc), None
+
+        x0 = lax.with_sharding_constraint(jnp.zeros((pp, mb, S, d), adt), x_sh)
+        tok0 = lax.with_sharding_constraint(
+            jnp.zeros((pp, mb, S), jnp.int32), tok_sh
+        )
+        (xf, tokf, loss_sum), _ = lax.scan(
+            tick, (x0, tok0, jnp.float32(0.0)), jnp.arange(T)
+        )
+        return loss_sum / microbatches
 
     return pipe_loss
+
+
+def merged_pipeline_shardings(cfg: ModelConfig, mesh: Mesh, parallel: ParallelConfig):
+    """Device shardings for pipelined params: pipe on the stacked axis of
+    block tensors, model/data axes via the standard rules."""
+    from repro.distribution.sharding import param_shardings
+    from repro.models.model import abstract_params
+
+    pipe_specs = pipeline_param_specs(cfg, parallel.pp)
+    ps_rules = param_shardings(cfg, mesh)
+
+    def merge(rule_sh, pipe_spec, leaf):
+        spec = list(rule_sh.spec) + [None] * (leaf.ndim - len(rule_sh.spec))
+        if pipe_spec and len(pipe_spec) > 0 and pipe_spec[0] == "pipe":
+            spec[0] = "pipe"
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+
+    aparams = abstract_params(cfg)
+    return jax.tree_util.tree_map(merge, ps_rules, pipe_specs, aparams)
 
 
 def jit_pipeline_train_step(
@@ -135,45 +210,18 @@ def jit_pipeline_train_step(
     Returns (jitted_fn(params, opt_state, batch)->(params,opt,metrics),
     (param_shardings, opt_shardings, batch_shardings)).
     """
-    pipe_specs = pipeline_param_specs(cfg, parallel.pp)
-    loss_inner = make_pipeline_loss(cfg, parallel, microbatches)
-
-    sharded_loss = jax.shard_map(
-        loss_inner,
-        mesh=mesh,
-        in_specs=(pipe_specs, P()),
-        out_specs=P(),
-        axis_names={"pipe"},
-    )
+    pipe_loss = make_pipeline_loss(cfg, parallel, microbatches, mesh)
 
     def train_step(params, opt_state, batch):
         loss, grads = jax.value_and_grad(
-            lambda p: sharded_loss(p, batch["tokens"])
+            lambda p: pipe_loss(p, batch["tokens"])
         )(params)
         new_params, new_opt, om = adamw_update(opt_cfg, grads, opt_state, params)
         return new_params, new_opt, {"loss": loss, **om}
 
-    # device shardings: pipe specs on stacked leaves; model/data via rules
-    from repro.distribution.sharding import (
-        batch_sharding,
-        opt_state_shardings,
-        param_shardings,
-    )
+    from repro.distribution.sharding import batch_sharding
 
-    ps_rules = param_shardings(cfg, mesh)
-
-    def merge(rule_sh, pipe_spec, leaf):
-        spec = list(rule_sh.spec) + [None] * (leaf.ndim - len(rule_sh.spec))
-        if pipe_spec and len(pipe_spec) > 0 and pipe_spec[0] == "pipe":
-            spec[0] = "pipe"
-        while spec and spec[-1] is None:
-            spec.pop()
-        return NamedSharding(mesh, P(*spec))
-
-    from repro.models.model import abstract_params
-
-    aparams = abstract_params(cfg)
-    ps = jax.tree_util.tree_map(merge, ps_rules, pipe_specs, aparams)
+    ps = merged_pipeline_shardings(cfg, mesh, parallel)
     os_ = {"mu": ps, "nu": ps, "count": NamedSharding(mesh, P())}
     bs = {"tokens": batch_sharding(mesh, global_batch)}
     jitted = jax.jit(

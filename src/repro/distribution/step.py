@@ -27,30 +27,17 @@ from repro.models import model as M
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 
 
-def make_train_step(
+def make_grad_fn(
     cfg: ModelConfig,
-    opt_cfg: AdamWConfig,
     microbatches: int = 1,
     remat: str = "full",
-    compression: str = "none",
-    hints: dict | None = None,
     grad_accum: str = "explicit",
 ):
-    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
-
-    ``grad_accum``: "explicit" computes per-microbatch gradients and sums
-    them (baseline; XLA emits the gradient collectives inside the loop —
-    one reduction PER MICROBATCH); "scan_loss" differentiates through a
-    rematted scan over microbatches, so gradient collectives are emitted
-    once per step (§Perf iteration: M microbatches → ~M× less gradient
-    reduction traffic; same math, same rematerialized memory profile).
-
-    ``hints``: activation-sharding constraints (models.shard_hints), applied
-    at trace time — the §Perf hillclimbing mechanism; None = paper-faithful
-    baseline (pure GSPMD propagation).
-    """
-
-    from repro.models import shard_hints
+    """Returns grad_step(params, batch) -> (loss, metrics, grads) — the
+    forward/backward half of the train step, shared verbatim by
+    ``make_train_step`` and the split-step commit path (overlapped live
+    reconfiguration streams state while this runs on the old world, then
+    applies ``make_update_fn`` on the new one)."""
 
     def grads_of(params, batch):
         (loss, metrics), grads = jax.value_and_grad(
@@ -58,7 +45,7 @@ def make_train_step(
         )(params)
         return loss, metrics, grads
 
-    def train_step(params, opt_state, batch):
+    def grad_step(params, batch):
         tokens = batch["tokens"]
         if microbatches > 1 and grad_accum == "scan_loss":
             import os as _os
@@ -120,11 +107,56 @@ def make_train_step(
             metrics = {}
         else:
             loss, metrics, grads = grads_of(params, batch)
+        return loss, metrics, grads
 
+    return grad_step
+
+
+def make_update_fn(opt_cfg: AdamWConfig, compression: str = "none"):
+    """Returns update(grads, opt_state, params) -> (params, opt, metrics) —
+    the optimizer half of the train step (elementwise up to the grad-clip
+    global norm, so it can run on a different sharding than the gradients
+    were computed under)."""
+
+    def update(grads, opt_state, params):
         if compression == "int8_ef":
             grads, opt_state = compress.compress_decompress_with_ef(grads, opt_state)
+        return adamw_update(opt_cfg, grads, opt_state, params)
 
-        new_params, new_opt, opt_metrics = adamw_update(opt_cfg, grads, opt_state, params)
+    return update
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    opt_cfg: AdamWConfig,
+    microbatches: int = 1,
+    remat: str = "full",
+    compression: str = "none",
+    hints: dict | None = None,
+    grad_accum: str = "explicit",
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    ``grad_accum``: "explicit" computes per-microbatch gradients and sums
+    them (baseline; XLA emits the gradient collectives inside the loop —
+    one reduction PER MICROBATCH); "scan_loss" differentiates through a
+    rematted scan over microbatches, so gradient collectives are emitted
+    once per step (§Perf iteration: M microbatches → ~M× less gradient
+    reduction traffic; same math, same rematerialized memory profile).
+
+    ``hints``: activation-sharding constraints (models.shard_hints), applied
+    at trace time — the §Perf hillclimbing mechanism; None = paper-faithful
+    baseline (pure GSPMD propagation).
+    """
+
+    from repro.models import shard_hints
+
+    grad_step = make_grad_fn(cfg, microbatches, remat, grad_accum)
+    update = make_update_fn(opt_cfg, compression)
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = grad_step(params, batch)
+        new_params, new_opt, opt_metrics = update(grads, opt_state, params)
         out_metrics = {"loss": loss, **metrics, **opt_metrics}
         return new_params, new_opt, out_metrics
 
@@ -201,6 +233,91 @@ def jit_train_step(
         donate_argnums=(0, 1),
     )
     return jitted, (ps, os_, batch_sh)
+
+
+def jit_grad_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    global_batch: int,
+    microbatches: int = 1,
+    remat: str = "full",
+    hint_version: str | None = None,
+    grad_accum: str = "explicit",
+    parallel=None,
+):
+    """Grads-only step for the split-step commit: (params, batch) ->
+    (loss, grads). Params are NOT donated — the overlapped resharder
+    streams them concurrently with this computation."""
+    from repro.models import shard_hints
+
+    hints = None
+    if hint_version:
+        from repro.models.shard_hints import make_train_hints
+
+        hints = make_train_hints(mesh, hint_version)
+    ps = param_shardings(cfg, mesh)
+    bs = batch_sharding(mesh, global_batch)
+    batch_sh = {"tokens": bs}
+    if cfg.family == "encdec":
+        batch_sh["frames"] = bs
+    if parallel is not None and parallel.pp > 1:
+        from repro.distribution.pipeline import (
+            make_pipeline_loss,
+            merged_pipeline_shardings,
+        )
+
+        loss_fn = make_pipeline_loss(
+            cfg, parallel, max(microbatches, parallel.pp), mesh
+        )
+        ps = merged_pipeline_shardings(cfg, mesh, parallel)
+
+        def fn(params, batch):
+            loss, grads = jax.value_and_grad(
+                lambda p: loss_fn(p, batch["tokens"])
+            )(params)
+            return loss, grads
+
+    else:
+        grad_step = make_grad_fn(cfg, microbatches, remat, grad_accum)
+
+        def fn(params, batch):
+            with shard_hints.active(hints):
+                loss, _, grads = grad_step(params, batch)
+            return loss, grads
+
+    jitted = jax.jit(fn, in_shardings=(ps, batch_sh), out_shardings=(None, ps))
+    return jitted, (ps, batch_sh)
+
+
+def jit_update_step(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    opt_cfg: AdamWConfig,
+    compression: str = "none",
+    parallel=None,
+):
+    """Optimizer-only step for the split-step commit, compiled for the NEW
+    world: (grads, opt_state, params) -> (params, opt, metrics). Grads,
+    state and params all arrive in the new world's shardings; params and
+    opt are donated (they are the freshly streamed copies)."""
+    if parallel is not None and parallel.pp > 1:
+        from repro.distribution.pipeline import merged_pipeline_shardings
+
+        ps = merged_pipeline_shardings(cfg, mesh, parallel)
+        os_ = {"mu": ps, "nu": ps, "count": NamedSharding(mesh, P())}
+    else:
+        ps, os_ = train_state_shardings(cfg, mesh)
+        if compression == "int8_ef":
+            os_ = dict(os_)
+            os_["ef"] = ps
+    fn = make_update_fn(opt_cfg, compression)
+    jitted = jax.jit(
+        fn,
+        in_shardings=(ps, os_, ps),
+        out_shardings=(ps, os_, None),
+        donate_argnums=(1, 2),
+    )
+    return jitted, (ps, os_)
 
 
 def jit_prefill_step(

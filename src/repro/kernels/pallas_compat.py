@@ -1,0 +1,32 @@
+"""Version compatibility for the Pallas TPU API surface we use.
+
+The kernels target the current documented API (``pltpu.CompilerParams``);
+older jaxlibs (<=0.4.x) expose the same dataclass as ``TPUCompilerParams``.
+Everything else we rely on (``PrefetchScalarGridSpec``, BlockSpec index
+maps, ``interpret=``) is stable across the versions this repo supports.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
+
+def compiler_params(**kwargs):
+    """Build TPU compiler params, dropping kwargs the installed version
+    doesn't know (e.g. ``dimension_semantics`` is accepted by both, but
+    future fields may not be)."""
+    if CompilerParams is None:  # pragma: no cover - pallas without TPU ext
+        return None
+    try:
+        return CompilerParams(**kwargs)
+    except TypeError:
+        known = {
+            k: v
+            for k, v in kwargs.items()
+            if k in getattr(CompilerParams, "__dataclass_fields__", {})
+        }
+        return CompilerParams(**known)

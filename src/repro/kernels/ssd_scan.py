@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import compiler_params as _compiler_params
+
 
 def _ssd_chunk_kernel(
     x_ref,  # (1, chunk, 1, p)
@@ -99,7 +101,7 @@ def ssd_intra_chunk_pallas(
             jax.ShapeDtypeStruct((b, s, h, p), jnp.float32),
             jax.ShapeDtypeStruct((b, nc, h, p, n), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel"),
         ),
         interpret=interpret,

@@ -46,6 +46,11 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--compression", default="none", choices=["none", "int8_ef"])
+    ap.add_argument("--overlap", default="stop_copy", choices=["stop_copy", "stream"],
+                    help="reconfiguration transfer mode: stop-copy pause or "
+                    "overlapped layer streaming with split-step commit")
+    ap.add_argument("--stream-k", type=int, default=4,
+                    help="layers pre-copied per iteration boundary (overlap=stream)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-interval", type=int, default=25)
     ap.add_argument("--resize", action="append", default=[], metavar="STEP:SPEC")
@@ -72,6 +77,7 @@ def main() -> None:
         cfg, parallel, opt, seq_len=args.seq, global_batch=args.batch,
         ckpt_dir=args.ckpt_dir, ckpt_interval=args.ckpt_interval,
         microbatches=args.microbatches, compression=args.compression,
+        overlap=args.overlap, stream_k=args.stream_k,
     )
     resizes = sorted(
         (int(s.split(":")[0]), parse_parallel(s.split(":")[1])) for s in args.resize

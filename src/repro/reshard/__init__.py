@@ -1,0 +1,38 @@
+"""Plan-driven reshard engine (paper §4.6, Algorithm 1) — one subsystem
+behind both execution backends.
+
+The planner (core/intersection.py) emits a :class:`TransferPlan`; this
+package executes it:
+
+  * :class:`ReshardEngine`   — backend-agnostic Algorithm 1 driver: layer
+    ordering, staging-budget chunking (Theorem 1 accounting), barriers,
+    :class:`StreamStats` byte/phase accounting.
+  * :class:`SimExecutor`     — multi-rank byte-level oracle over
+    ``RankStore`` numpy shards (the semantics reference; property-tested).
+  * :class:`LiveExecutor`    — the live path over global ``jax.Array``s:
+    deduplicates replica fan-out, merges plan cells into contiguous
+    row-range groups, routes them through the Pallas ``pack_rows`` /
+    ``unpack_rows`` kernels (interpret / reference mode on CPU) with a
+    ``device_put`` + dynamic-update-slice fallback.
+  * :class:`OverlapSession`  — overlapped layer streaming for the live
+    controller: K layers per iteration boundary (pre-copy), dirty-layer
+    re-sync, residual-tail commit (DESIGN.md §9).
+
+See DESIGN.md §9 for the architecture and the commit protocol.
+"""
+
+from repro.reshard.chunking import chunk_task, row_batches
+from repro.reshard.engine import ReshardEngine, StreamStats, DEFAULT_STAGING_BYTES
+from repro.reshard.executors import LiveExecutor, SimExecutor
+from repro.reshard.overlap import OverlapSession
+
+__all__ = [
+    "ReshardEngine",
+    "StreamStats",
+    "DEFAULT_STAGING_BYTES",
+    "SimExecutor",
+    "LiveExecutor",
+    "OverlapSession",
+    "chunk_task",
+    "row_batches",
+]

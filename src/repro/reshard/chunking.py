@@ -1,0 +1,68 @@
+"""The single chunking implementation shared by every reshard backend.
+
+Oversized payloads are split into fixed-budget row batches along one dim
+(paper §5: fixed-size chunks, default 512 MB). Formerly duplicated between
+``core/streaming._chunk_task`` (sim) and ``core/reshard._reshard_chunked``
+(live); both now call here.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.intersection import TransferTask
+
+
+def rows_per_budget(per_row_bytes: int, budget: int) -> int:
+    """Rows of ``per_row_bytes`` that fit the staging budget (≥1)."""
+    return max(1, budget // max(per_row_bytes, 1))
+
+
+def row_batches(
+    lo: int, hi: int, per_row_bytes: int, budget: int
+) -> list[tuple[int, int]]:
+    """Split the index range [lo, hi) into consecutive batches whose payload
+    (``per_row_bytes`` each) stays within ``budget`` (≥1 row per batch)."""
+    rows = rows_per_budget(per_row_bytes, budget)
+    out = []
+    start = lo
+    while start < hi:
+        end = min(start + rows, hi)
+        out.append((start, end))
+        start = end
+    return out
+
+
+def chunk_task(task: TransferTask, budget: int) -> list[TransferTask]:
+    """Split a task whose payload exceeds the staging budget into sub-slices
+    along its largest dim."""
+    if task.nbytes <= budget:
+        return [task]
+    shape = task.shape()
+    d = int(np.argmax(shape))
+    per_row = task.nbytes // shape[d]
+    lo, hi = task.bounds[d]
+    out = []
+    for start, end in row_batches(lo, hi, per_row, budget):
+        bounds = list(task.bounds)
+        bounds[d] = (start, end)
+        out.append(
+            TransferTask(
+                tensor=task.tensor,
+                collection=task.collection,
+                src_rank=task.src_rank,
+                dst_rank=task.dst_rank,
+                bounds=tuple(bounds),
+                src_offset=tuple(
+                    o + (start - lo if i == d else 0)
+                    for i, o in enumerate(task.src_offset)
+                ),
+                dst_offset=tuple(
+                    o + (start - lo if i == d else 0)
+                    for i, o in enumerate(task.dst_offset)
+                ),
+                nbytes=task.nbytes * (end - start) // shape[d],
+                layer=task.layer,
+            )
+        )
+    return out

@@ -1,0 +1,217 @@
+"""ReshardEngine: one plan, two backends — the live jax.Array executor must
+produce byte-identical destination shards to the simulated-rank oracle, and
+overlapped streaming must preserve training parity with stop-copy."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from conftest import RESHAPE_PARITY_TOL
+from repro.reshard.chunking import chunk_task, row_batches
+
+
+def test_row_batches_shared_chunker():
+    assert row_batches(0, 10, per_row_bytes=4, budget=12) == [
+        (0, 3), (3, 6), (6, 9), (9, 10),
+    ]
+    assert row_batches(5, 6, per_row_bytes=1 << 30, budget=1) == [(5, 6)]
+
+
+def test_chunk_task_uses_shared_row_batches():
+    from repro.core.intersection import TransferTask
+
+    t = TransferTask(
+        tensor="params/w", collection="params", src_rank=0, dst_rank=1,
+        bounds=((0, 64), (0, 32)), src_offset=(0, 0), dst_offset=(0, 0),
+        nbytes=64 * 32 * 4, layer=0,
+    )
+    chunks = chunk_task(t, budget=32 * 4 * 16)
+    assert [c.bounds[0] for c in chunks] == row_batches(0, 64, 32 * 4, 32 * 4 * 16)
+    assert sum(c.nbytes for c in chunks) == t.nbytes
+
+
+# The cross-backend parity sweep runs in a subprocess with 8 host devices:
+# the plan is executed (a) by SimExecutor over per-rank numpy shards and
+# (b) by LiveExecutor over globally-sharded jax.Arrays; destination shards
+# must be byte-identical for every rank of the target configuration.
+_PARITY_SNIPPET = """
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs.base import ParallelConfig
+from repro.core.intersection import plan_transfer
+from repro.core.resource_view import TensorSpec, view_of
+from repro.core.streaming import allocate_destination, execute_plan, materialize_rank
+from repro.distribution.sharding import make_elastic_mesh
+from repro.reshard import LiveExecutor, ReshardEngine
+
+ROLE_AXIS = {"pp": "pipe", "tp": "model", "dp": "data", "ep": "expert", "none": None}
+
+def sharding_for(spec, mesh):
+    return NamedSharding(mesh, P(*[ROLE_AXIS[r] for r in spec.roles]))
+
+specs = [
+    TensorSpec("params/blocks/pos0/w", (8, 16, 32), "float32",
+               ("pp", "none", "tp"), "stages", "params"),
+    TensorSpec("params/blocks/pos0/b", (8, 32), "float32",
+               ("pp", "tp"), "stages", "params"),
+    TensorSpec("params/embed/tok", (64, 32), "float32", ("tp", "none"),
+               "first", "params"),
+    TensorSpec("mu/blocks/pos0/w", (8, 16, 32), "float32",
+               ("pp", "none", "tp"), "stages", "mu"),
+]
+TRANSITIONS = [
+    ("tp_grow",  ParallelConfig(dp=2, tp=2), ParallelConfig(dp=1, tp=4)),
+    ("dp_grow",  ParallelConfig(dp=1, tp=4), ParallelConfig(dp=2, tp=4)),
+    ("dp_shrink",ParallelConfig(dp=2, tp=2), ParallelConfig(dp=1, tp=2)),
+    ("pp_to_tp", ParallelConfig(pp=2, tp=2), ParallelConfig(pp=1, tp=4)),
+    ("tp_to_pp", ParallelConfig(dp=2, tp=2), ParallelConfig(pp=4, tp=2)),
+]
+rng = np.random.default_rng(0)
+g = {s.name: rng.normal(size=s.shape).astype(s.dtype) for s in specs}
+for name, ca, cb in TRANSITIONS:
+    plan = plan_transfer(specs, ca, cb, num_positions=1)
+    # oracle: simulated ranks
+    src = {r: materialize_rank(specs, ca, r, g) for r in range(ca.world_size)}
+    dst = {r: allocate_destination(specs, cb, r) for r in range(cb.world_size)}
+    sim_stats = execute_plan(plan, src, dst, staging_bytes=2048)
+    # live: global jax.Arrays, sharded on mesh_a -> mesh_b
+    mesh_a, mesh_b = make_elastic_mesh(ca), make_elastic_mesh(cb)
+    live_src = {s.name: jax.device_put(jnp.asarray(g[s.name]), sharding_for(s, mesh_a))
+                for s in specs}
+    targets = {s.name: sharding_for(s, mesh_b) for s in specs}
+    ex = LiveExecutor({s.name: s for s in specs}, live_src, targets, 2048)
+    live_stats = ReshardEngine(plan, ex, staging_bytes=2048).run()
+    ex.block_until_ready()
+    # identical engine-side accounting from both backends
+    assert live_stats.network_bytes == sim_stats.network_bytes, name
+    assert live_stats.local_bytes == sim_stats.local_bytes, name
+    assert live_stats.layers_streamed == sim_stats.layers_streamed, name
+    live_stats.assert_bounded(2048)
+    # byte-identical destination shards on every target rank
+    for s in specs:
+        got = np.asarray(jax.device_get(ex.results()[s.name]))
+        np.testing.assert_array_equal(got, g[s.name], err_msg=f"{name}/{s.name}")
+        for r in range(cb.world_size):
+            v = view_of(s, cb, r)
+            if v is None:
+                continue
+            sl = tuple(slice(lo, hi) for lo, hi in v.bounds)
+            np.testing.assert_array_equal(
+                got[sl], dst[r].shards[s.name], err_msg=f"{name}/{s.name}/rank{r}")
+    print("BACKEND_PARITY_OK", name)
+print("ALL_OK")
+"""
+
+
+def test_live_matches_sim_across_reshapes(subproc):
+    out = subproc(_PARITY_SNIPPET, n_devices=8)
+    assert "ALL_OK" in out
+    assert out.count("BACKEND_PARITY_OK") == 5
+
+
+def test_dirty_resync_is_byte_exact(subproc):
+    """The one-step-stale failure class: pre-copy all layers, mutate the
+    sources (as an optimizer step would), re-sync the dirty set — the
+    destination must equal the NEW source bytes exactly, including layers
+    that were re-streamed over their stale pre-copied values (overwrite,
+    not accumulate) and scattered (non-contiguous) dirty row sets."""
+    out = subproc(
+        """
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs.base import ParallelConfig
+        from repro.core.intersection import plan_transfer
+        from repro.core.resource_view import TensorSpec
+        from repro.distribution.sharding import make_elastic_mesh
+        from repro.reshard import OverlapSession
+
+        specs = [TensorSpec("params/blocks/pos0/w", (8, 16, 32), "float32",
+                            ("pp", "none", "tp"), "stages", "params")]
+        ca, cb = ParallelConfig(dp=2, tp=2), ParallelConfig(pp=2, tp=2)
+        plan = plan_transfer(specs, ca, cb, num_positions=1)
+        mesh_a, mesh_b = make_elastic_mesh(ca), make_elastic_mesh(cb)
+        sh_a = NamedSharding(mesh_a, P(None, None, "model"))
+        sh_b = NamedSharding(mesh_b, P("pipe", None, "model"))
+        rng = np.random.default_rng(0)
+        v0 = rng.normal(size=(8, 16, 32)).astype(np.float32)
+        v1 = v0 + 1.0   # "optimizer stepped": every element changed
+
+        def leaves(v):
+            return {specs[0].name: jax.device_put(jnp.asarray(v), sh_a)}
+
+        sess = OverlapSession(specs, plan, {}, {specs[0].name: sh_b},
+                              staging_bytes=1 << 20, stream_k=3)
+        # pre-copy rounds at step 0 (3 + 3 + 2 + 1(non-layer none) layers)
+        while not sess.done_precopy:
+            sess.stream_next(leaves(v0), step=0)
+        got0 = np.asarray(jax.device_get(sess.results()[specs[0].name]))
+        np.testing.assert_array_equal(got0, v0)
+        # everything streamed at step 0 is dirty once the optimizer steps
+        assert sorted(sess.dirty_layers(1)) == sess.engine.layers()
+        sess.resync(leaves(v1), step=1)
+        got1 = np.asarray(jax.device_get(sess.results()[specs[0].name]))
+        np.testing.assert_array_equal(got1, v1)  # NOT v0+v1, NOT stale v0
+        assert not sess.dirty_layers(1)
+        print("RESYNC_EXACT_OK resynced=%d" % sess.report.resync_layers)
+        """,
+        n_devices=8,
+    )
+    assert "RESYNC_EXACT_OK" in out
+
+
+def test_overlapped_streaming_matches_stop_copy(subproc):
+    """Same data, same seeds: the overlapped (pre-copy + dirty re-sync +
+    split-step commit) controller must track the stop-copy controller's
+    loss trajectory step for step, and its blocking commit pause must not
+    include the pre-copied bytes."""
+    out = subproc(
+        """
+        import time, numpy as np
+        import jax, jax.tree_util as jtu
+        from repro.configs import get_config
+        from repro.configs.base import ParallelConfig
+        from repro.core.controller import LiveRController
+        from repro.optim import AdamWConfig
+
+        cfg = get_config("qwen3-1.7b").reduced()
+        opt = AdamWConfig(learning_rate=1e-3, warmup_steps=5)
+
+        def run(mode):
+            ctrl = LiveRController(cfg, ParallelConfig(dp=2, tp=2), opt,
+                                   seq_len=32, global_batch=8,
+                                   overlap=mode, stream_k=2)
+            losses = ctrl.train_steps(3)
+            ctrl.request_resize(ParallelConfig(dp=1, tp=4))
+            t0 = time.time()
+            while not ctrl.records and time.time() - t0 < 420:
+                losses += ctrl.train_steps(1)
+            assert ctrl.records, mode
+            losses += ctrl.train_steps(3)
+            return ctrl, losses
+
+        c_stop, l_stop = run("stop_copy")
+        c_ovl, l_ovl = run("stream")
+        rec = c_ovl.records[0]
+        assert rec.mode == "live_overlap", rec.mode
+        assert rec.precopy_bytes > 0, "no layers were pre-copied"
+        assert rec.dirty_layers <= rec.layers_total
+        # every planned byte arrived (pre-copy round + dirty re-sync)
+        assert rec.precopy_bytes + rec.resync_bytes >= (
+            rec.plan_network_bytes + rec.plan_local_bytes)
+        # equalize step counts (prepare duration varies between runs)
+        n = max(len(l_stop), len(l_ovl))
+        l_stop += c_stop.train_steps(n - len(l_stop))
+        l_ovl += c_ovl.train_steps(n - len(l_ovl))
+        dev = max(abs(a - b) for a, b in zip(l_stop, l_ovl))
+        assert dev < __TOL__, f"loss trajectory diverged: {dev}"
+        p_s = c_stop.gathered_params(); p_o = c_ovl.gathered_params()
+        md = max(jtu.tree_leaves(jtu.tree_map(
+            lambda a, b: float(np.abs(a - b).max()), p_s, p_o)))
+        assert md < __TOL__, f"param divergence {md}"
+        print("OVERLAP_PARITY_OK loss_dev=%.2e param_dev=%.2e pause=%.3fs" %
+              (dev, md, rec.total_pause_s))
+        """.replace("__TOL__", repr(RESHAPE_PARITY_TOL)),
+        n_devices=8,
+    )
+    assert "OVERLAP_PARITY_OK" in out
