@@ -47,6 +47,9 @@ def main() -> None:
                   f"transfer={r.transfer_s*1e3:.1f}ms update={r.update_s*1e3:.1f}ms "
                   f"switch={r.switch_s*1e3:.2f}ms total_pause={r.total_pause_s*1e3:.1f}ms "
                   f"precopy={r.precopy_s*1e3:.1f}ms resync={r.resync_s*1e3:.1f}ms "
+                  f"dispatch={r.stream_dispatch_s*1e3:.1f}ms "
+                  f"stream_drain={r.stream_drain_s*1e3:.1f}ms "
+                  f"generic_cells={r.generic_cells} "
                   f"dirty={r.dirty_layers}/{r.layers_total} "
                   f"prepare_overlapped={r.prepare_s:.1f}s moved={r.moved_bytes/1e6:.1f}MB")
             print(f"PAUSE {mode} {r.total_pause_s:.6f}")

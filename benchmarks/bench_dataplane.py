@@ -1,0 +1,188 @@
+"""Reshard data-plane microbench (ISSUE 3 acceptance gate).
+
+Measures, on the scattered-row (dirty re-sync) workload:
+
+  * kernel-level pack/scatter throughput (``ops.pack_rows`` + the jitted
+    fused overwrite-scatter), and
+  * per-round streaming latency through ``ReshardEngine``/``LiveExecutor``
+    — the fused pack -> staged put -> overwrite-scatter path vs the legacy
+    per-run dynamic-update-slice chain (``LiveExecutor(fused=False)``) —
+  * plus double-buffered ``OverlapSession`` round latency with its
+    dispatch-vs-drain attribution.
+
+Emits the usual ``name,us,derived`` CSV rows and writes
+``results/BENCH_dataplane.json`` so the perf trajectory is recorded run
+over run. ``--smoke`` shrinks sizes for CI; ``--check`` exits nonzero
+unless the fused path is strictly faster than the per-run DUS path.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from benchmarks.common import RESULTS, emit, run_with_devices
+
+_SNIPPET = """
+import json, time
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.core.intersection import TransferPlan, TransferTask
+from repro.core.resource_view import TensorSpec
+from repro.reshard import LiveExecutor, OverlapSession, ReshardEngine
+
+R, C, ITERS, L = __R__, __C__, __ITERS__, __L__
+name = "params/w"
+spec = TensorSpec(name, (R, C), "float32", ("none", "none"), "all", "params")
+mesh = Mesh(np.array(jax.devices()).reshape(1, 8), ("data", "model"))
+sh = NamedSharding(mesh, P(None, "model"))
+rng = np.random.default_rng(0)
+leaf = jax.device_put(jnp.asarray(rng.normal(size=(R, C)).astype(np.float32)), sh)
+
+def row_task(r, layer):
+    return TransferTask(tensor=name, collection="params", src_rank=0,
+                        dst_rank=1, bounds=((r, r + 1), (0, C)),
+                        src_offset=(r, 0), dst_offset=(r, 0),
+                        nbytes=C * 4, layer=layer)
+
+# dirty re-sync workload: every other row of the tensor, one layer
+rows = list(range(0, R, 2))
+plan = TransferPlan(tasks=[row_task(r, 0) for r in rows],
+                    cfg_src=None, cfg_dst=None)
+budget = len(rows) * C * 4  # whole scatter in one staging batch
+round_bytes = len(rows) * C * 4
+
+# --- kernel-level throughput ----------------------------------------------
+from repro.kernels import ops
+starts = jnp.asarray(rows, jnp.int32)
+buf = ops.pack_rows(leaf, starts, 1); buf.block_until_ready()  # warm
+t0 = time.perf_counter()
+for _ in range(ITERS):
+    ops.pack_rows(leaf, starts, 1).block_until_ready()
+pack_s = (time.perf_counter() - t0) / ITERS
+
+scat = jax.jit(lambda d, b, s: ops.scatter_rows(d, b, s, 1))
+dst0 = jnp.zeros((R, C), jnp.float32)
+scat(dst0, buf, starts).block_until_ready()  # warm
+t0 = time.perf_counter()
+for _ in range(ITERS):
+    scat(dst0, buf, starts).block_until_ready()
+scatter_s = (time.perf_counter() - t0) / ITERS
+
+# --- per-round streaming latency: fused vs per-run DUS --------------------
+def time_path(fused):
+    ex = LiveExecutor({name: spec}, {name: leaf}, {name: sh}, budget, fused=fused)
+    eng = ReshardEngine(plan, ex, staging_bytes=budget)
+    eng.run(); ex.block_until_ready()  # warm caches + carry
+    ts = []
+    for _ in range(ITERS):
+        ex.reset_round()
+        t0 = time.perf_counter()
+        s = eng.run()
+        ex.block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    got = np.asarray(jax.device_get(ex.results()[name]))
+    exp = np.zeros((R, C), np.float32); exp[rows] = np.asarray(leaf)[rows]
+    np.testing.assert_array_equal(got, exp)  # both paths move the same bytes
+    return min(ts), s
+
+legacy_s, _ = time_path(False)
+fused_s, fstats = time_path(True)
+
+# --- double-buffered OverlapSession rounds --------------------------------
+band = R // L
+lplan = TransferPlan(
+    tasks=[row_task(l * band + o, l) for l in range(L)
+           for o in range(0, band, 2)],
+    cfg_src=None, cfg_dst=None)
+sess = OverlapSession([spec], lplan, {}, {name: sh}, budget, stream_k=2)
+t0 = time.perf_counter()
+rounds = 0
+while not sess.done_precopy:
+    sess.stream_next({name: leaf}, step=0)
+    rounds += 1
+sess.drain()
+precopy_s = time.perf_counter() - t0
+t0 = time.perf_counter()
+sess.resync({name: leaf}, step=1)
+resync_s = time.perf_counter() - t0
+
+print("JSON " + json.dumps({
+    "config": {"R": R, "C": C, "iters": ITERS, "scattered_rows": len(rows),
+               "round_bytes": round_bytes},
+    "kernel": {
+        "pack_ms": pack_s * 1e3,
+        "pack_gbps": round_bytes / pack_s / 1e9,
+        "scatter_ms": scatter_s * 1e3,
+        "scatter_gbps": round_bytes / scatter_s / 1e9,
+    },
+    "round_scattered": {
+        "legacy_dus_ms": legacy_s * 1e3,
+        "fused_ms": fused_s * 1e3,
+        "speedup": legacy_s / fused_s,
+        "gbps_fused": round_bytes / fused_s / 1e9,
+        "generic_cells": fstats.generic_cells,
+    },
+    "overlap": {
+        "rounds": rounds,
+        "precopy_ms": precopy_s * 1e3,
+        "dispatch_ms": sess.report.dispatch_seconds * 1e3,
+        "drain_ms": sess.report.drain_seconds * 1e3,
+        "resync_ms": resync_s * 1e3,
+    },
+}))
+"""
+
+
+def main(argv=()) -> None:
+    smoke = "--smoke" in argv
+    check = "--check" in argv
+    R, C, iters, L = (512, 256, 2, 4) if smoke else (4096, 1024, 5, 8)
+    code = (
+        _SNIPPET.replace("__R__", str(R))
+        .replace("__C__", str(C))
+        .replace("__ITERS__", str(iters))
+        .replace("__L__", str(L))
+    )
+    out = run_with_devices(code, n_devices=8)
+    payload = None
+    for line in out.splitlines():
+        if line.startswith("JSON "):
+            payload = json.loads(line[5:])
+    assert payload is not None, f"no JSON payload in bench output:\n{out[-2000:]}"
+    payload["mode"] = "smoke" if smoke else "full"
+    payload["fused_faster"] = (
+        payload["round_scattered"]["fused_ms"]
+        < payload["round_scattered"]["legacy_dus_ms"]
+    )
+
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, "BENCH_dataplane.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+
+    k, r, o = payload["kernel"], payload["round_scattered"], payload["overlap"]
+    emit("dataplane/pack", k["pack_ms"] * 1e3, f"{k['pack_gbps']:.2f}GB/s")
+    emit("dataplane/scatter", k["scatter_ms"] * 1e3, f"{k['scatter_gbps']:.2f}GB/s")
+    emit(
+        "dataplane/round_scattered", r["fused_ms"] * 1e3,
+        f"legacy_dus={r['legacy_dus_ms']:.1f}ms;fused={r['fused_ms']:.1f}ms;"
+        f"speedup={r['speedup']:.2f}x;generic_cells={r['generic_cells']};"
+        f"fused_faster={payload['fused_faster']}",
+    )
+    emit(
+        "dataplane/overlap_rounds", o["precopy_ms"] * 1e3,
+        f"rounds={o['rounds']};dispatch={o['dispatch_ms']:.1f}ms;"
+        f"drain={o['drain_ms']:.1f}ms;resync={o['resync_ms']:.1f}ms",
+    )
+    emit("dataplane/json", 0.0, path)
+    if check and not payload["fused_faster"]:
+        raise SystemExit(
+            f"fused path not faster: {r['fused_ms']:.1f}ms vs "
+            f"legacy {r['legacy_dus_ms']:.1f}ms"
+        )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

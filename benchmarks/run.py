@@ -24,6 +24,7 @@ BENCHES = [
     ("plan", "benchmarks.bench_plan"),
     ("movefrac", "benchmarks.bench_move_fraction"),
     ("roofline", "benchmarks.bench_roofline"),
+    ("dataplane", "benchmarks.bench_dataplane"),
 ]
 
 

@@ -67,6 +67,12 @@ class ReconfigRecord:
     update_s: float = 0.0
     dirty_layers: int = 0
     layers_total: int = 0
+    # async data-plane attribution: host time issuing device programs vs
+    # blocking for them, and cells that fell off the row-merge fast path
+    # (a growing generic_cells count flags a slow-path regression)
+    stream_dispatch_s: float = 0.0
+    stream_drain_s: float = 0.0
+    generic_cells: int = 0
 
 
 class LiveRController:
@@ -432,6 +438,9 @@ class LiveRController:
             stats.network_bytes + stats.local_bytes + rep_x.moved_bytes
         )
         rec.executed_bytes = stats.executed_bytes + rep_x.moved_bytes
+        rec.stream_dispatch_s = stats.dispatch_seconds
+        rec.stream_drain_s = stats.drain_seconds
+        rec.generic_cells = stats.generic_cells
 
         # 3. atomic switch: pointer swap of world references
         t0 = time.perf_counter()
@@ -470,9 +479,13 @@ class LiveRController:
         loss, grads = self.world.grad_fn(self.params, batch)
 
         # overlapped with it: re-sync every dirty layer from this
-        # boundary's consistent cut, plus the non-resource-view leftovers
+        # boundary's consistent cut, plus the non-resource-view leftovers.
+        # drain=False: only the dispatch (and the staging sync) happens
+        # here — the scatters keep landing underneath the grad computation,
+        # and the single blocking drain moves inside the pause where it is
+        # a residual tail rather than a full re-stream wait
         named, extras = named_state_leaves(self.params, self.opt_state)
-        session.resync(named, self.step)
+        session.resync(named, self.step, drain=False)
         new_extras, _ = live_reshard(
             extras, self._extra_shardings(new_world),
             staging_bytes=self.staging_bytes,
@@ -481,9 +494,14 @@ class LiveRController:
         jax.block_until_ready((loss, grads))
         grad_tail_s = time.perf_counter() - t1  # residual wait past overlap
 
-        # ---- the commit pause: grad reshard + update + pointer swap ----
+        # ---- the commit pause: re-sync tail + grad reshard + update +
+        # pointer swap. session.drain() is the ONLY blocking wait on the
+        # streamed state (per-round barriers were retired with the async
+        # data plane); it must land before update_fn may donate the
+        # destination carries ----
         pause_start = time.perf_counter()
         self.machine.begin_switch(gen_id)
+        commit_drain_s = session.drain()
         t0 = time.perf_counter()
         p_specs = [s for s in self._session_specs if s.collection == "params"]
         from repro.core.intersection import TransferPlan
@@ -527,11 +545,19 @@ class LiveRController:
         rec.total_pause_s = time.perf_counter() - pause_start
 
         rep = session.report
-        rec.drain_s = grad_tail_s
+        # drain_s = residual waits: grad tail outside the pause + re-sync
+        # tail inside it (commit_drain_s appears here and on the drain-side
+        # axis below, nowhere else — the phase columns stay additive)
+        rec.drain_s = grad_tail_s + commit_drain_s
         rec.precopy_s = rep.precopy_seconds
         rec.precopy_bytes = rep.precopy_bytes
         rec.resync_s = rep.resync_seconds
         rec.resync_bytes = rep.resync_bytes
+        rec.stream_dispatch_s = rep.dispatch_seconds + g_stats.dispatch_seconds
+        rec.stream_drain_s = (
+            rep.drain_seconds + commit_drain_s + g_stats.drain_seconds
+        )
+        rec.generic_cells = session.stats.generic_cells + g_stats.generic_cells
         rec.dirty_layers = rep.resync_layers
         rec.layers_total = len(plan.layers())
         rec.plan_network_bytes = plan.network_bytes

@@ -148,7 +148,9 @@ def live_reshard(
         )
         engine = ReshardEngine(plan, executor, staging_bytes=staging_bytes)
         stats = engine.run()
+        t1 = time.perf_counter()
         executor.block_until_ready()
+        stats.drain_seconds += time.perf_counter() - t1
         for t in tasks:
             out_leaves[int(t.tensor[4:])] = executor.results()[t.tensor]
         report.moved_bytes += stats.network_bytes + stats.local_bytes
@@ -242,5 +244,7 @@ def live_reshard_planned(
     executor = LiveExecutor(spec_map, named_leaves, target_shardings, staging_bytes)
     engine = ReshardEngine(plan, executor, staging_bytes=staging_bytes)
     stats = engine.run(layers)
+    t1 = time.perf_counter()
     executor.block_until_ready()
+    stats.drain_seconds += time.perf_counter() - t1
     return executor.results(), stats

@@ -18,7 +18,11 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
-from repro.kernels.reshard_pack import pack_rows_pallas, unpack_rows_pallas
+from repro.kernels.reshard_pack import (
+    pack_rows_pallas,
+    scatter_rows_pallas,
+    unpack_rows_pallas,
+)
 from repro.kernels.ssd_scan import ssd_intra_chunk_pallas
 
 
@@ -127,14 +131,25 @@ def ssd_scan(x, dt, A, B, C, chunk, init_state=None):
 # ---------------------------------------------------------------------------
 
 
-def pack_rows(src, row_starts, block_rows: int):
-    use, interp = _use_pallas()
+def _starts_aligned(row_starts, block_rows: int) -> bool:
+    """Block-alignment of the offset table, tracer-safe: block_rows == 1 is
+    always aligned; a traced table with block_rows > 1 cannot be checked at
+    dispatch time and conservatively falls back to the reference path."""
+    if block_rows == 1:
+        return True
+    if isinstance(row_starts, jax.core.Tracer):
+        return False
     import numpy as np
 
+    return bool(np.all(np.asarray(row_starts) % block_rows == 0))
+
+
+def pack_rows(src, row_starts, block_rows: int):
+    use, interp = _use_pallas()
     aligned = (
         src.shape[0] % block_rows == 0
         and src.shape[1] % 128 == 0
-        and bool(np.all(np.asarray(row_starts) % block_rows == 0))
+        and _starts_aligned(row_starts, block_rows)
     )
     if use and aligned:
         return pack_rows_pallas(
@@ -145,12 +160,10 @@ def pack_rows(src, row_starts, block_rows: int):
 
 def unpack_rows(buf, row_starts, block_rows: int, out_rows: int):
     use, interp = _use_pallas()
-    import numpy as np
-
     aligned = (
         out_rows % block_rows == 0
         and buf.shape[1] % 128 == 0
-        and bool(np.all(np.asarray(row_starts) % block_rows == 0))
+        and _starts_aligned(row_starts, block_rows)
     )
     if use and aligned:
         return unpack_rows_pallas(
@@ -158,4 +171,27 @@ def unpack_rows(buf, row_starts, block_rows: int, out_rows: int):
         )
     return _ref.unpack_rows_ref(
         buf, jnp.asarray(row_starts, jnp.int32), block_rows, out_rows
+    )
+
+
+def scatter_rows(dst, buf, row_starts, block_rows: int):
+    """Overwrite-scatter buffer blocks into ``dst`` (treated as donated).
+
+    The idempotent counterpart of ``pack_rows``: rows not named by
+    ``row_starts`` keep their existing bytes, and re-applying the same
+    scatter is a no-op — the property the dirty-layer re-stream depends on.
+    Duplicate starts resolve last-wins on both paths.
+    """
+    use, interp = _use_pallas()
+    aligned = (
+        dst.shape[0] % block_rows == 0
+        and dst.shape[1] % 128 == 0
+        and _starts_aligned(row_starts, block_rows)
+    )
+    if use and aligned:
+        return scatter_rows_pallas(
+            dst, buf, jnp.asarray(row_starts, jnp.int32), block_rows, interpret=interp
+        )
+    return _ref.scatter_rows_ref(
+        dst, buf, jnp.asarray(row_starts, jnp.int32), block_rows
     )

@@ -175,3 +175,25 @@ def unpack_rows_ref(
         )
 
     return jax.lax.fori_loop(0, nb, body, out)
+
+
+def scatter_rows_ref(
+    dst: jax.Array, buf: jax.Array, row_starts: jax.Array, block_rows: int
+) -> jax.Array:
+    """Overwrite-scatter buffer blocks into an existing destination.
+
+    Unlike ``unpack_rows_ref`` the base is the caller's ``dst``, so rows not
+    named by ``row_starts`` keep their current values and re-applying the
+    same scatter is idempotent (the dirty-layer re-stream invariant).
+    Duplicate starts resolve last-wins (sequential fori_loop), matching the
+    Pallas kernel's sequential grid.
+    """
+    nb = row_starts.shape[0]
+    blocks = buf.reshape(nb, block_rows, buf.shape[1])
+
+    def body(i, acc):
+        return jax.lax.dynamic_update_slice_in_dim(
+            acc, blocks[i], row_starts[i], axis=0
+        )
+
+    return jax.lax.fori_loop(0, nb, body, dst)

@@ -1,17 +1,26 @@
-"""Pallas TPU kernel for the streaming resharder's staging-buffer assembly.
+"""Pallas TPU kernels for the streaming resharder's staging-buffer assembly.
 
 The hot loop of LiveR's layer-streaming protocol (paper Algorithm 1, lines
 13–17) gathers the planned row-ranges of a source shard into the contiguous
 staging buffer (pack) and scatters received buffer blocks into the new
-parameter storage (unpack). On TPU these are bandwidth-bound strided copies;
-doing them as one Pallas kernel with scalar-prefetched offsets avoids one
-HBM round trip per slice versus a concat-of-dynamic-slices graph.
+parameter storage (unpack / scatter). On TPU these are bandwidth-bound
+strided copies; doing them as one Pallas kernel with scalar-prefetched
+offsets avoids one HBM round trip per slice versus a concat-of-dynamic-
+slices graph.
 
 Uses ``PrefetchScalarGridSpec``: the row-offset table is prefetched into
 SMEM and consumed by the BlockSpec index maps, so the copy schedule is
 data-dependent without host round trips.
 
-Oracles: :func:`repro.kernels.ref.pack_rows_ref` / ``unpack_rows_ref``.
+``scatter_rows`` is the overwrite-semantics counterpart of ``unpack_rows``:
+instead of scattering into a zeroed output it scatters into an existing
+destination carried through ``input_output_aliases`` (the destination is
+donated, untouched blocks keep their bytes). Overwrite makes re-streaming a
+dirty layer idempotent — the invariant the live re-sync path depends on —
+where an accumulate scatter would compound onto stale pre-copied values.
+
+Oracles: :func:`repro.kernels.ref.pack_rows_ref` / ``unpack_rows_ref`` /
+``scatter_rows_ref``.
 """
 
 from __future__ import annotations
@@ -89,3 +98,49 @@ def unpack_rows_pallas(
         out_shape=jax.ShapeDtypeStruct((out_rows, C), buf.dtype),
         interpret=interpret,
     )(row_starts, buf)
+
+
+def _scatter_kernel(starts_ref, buf_ref, dst_ref, o_ref):
+    del starts_ref, dst_ref  # starts: index maps; dst: aliased into the output
+    o_ref[...] = buf_ref[...]
+
+
+def scatter_rows_pallas(
+    dst: jax.Array,  # (R, C) — donated; aliased into the output
+    buf: jax.Array,  # (nb*block_rows, C)
+    row_starts: jax.Array,  # (nb,) int32
+    block_rows: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Overwrite-scatter buffer blocks into ``dst`` at the given row offsets.
+
+    ``dst`` is aliased to the output (``input_output_aliases``), so blocks
+    not named by ``row_starts`` keep their existing bytes — no zero base,
+    no full-destination rewrite. Duplicate starts resolve last-wins (the
+    grid is sequential), matching the jnp oracle's fori_loop order. The
+    caller must treat ``dst`` as donated.
+    """
+    nb = row_starts.shape[0]
+    C = dst.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_rows, C), lambda i, starts: (i, 0)),
+            pl.BlockSpec(
+                (block_rows, C), lambda i, starts: (starts[i] // block_rows, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_rows, C), lambda i, starts: (starts[i] // block_rows, 0)
+        ),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        # flattened input index 2 (starts, buf, dst) -> output 0
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(row_starts, buf, dst)

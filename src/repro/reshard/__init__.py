@@ -11,12 +11,17 @@ package executes it:
     ``RankStore`` numpy shards (the semantics reference; property-tested).
   * :class:`LiveExecutor`    — the live path over global ``jax.Array``s:
     deduplicates replica fan-out, merges plan cells into contiguous
-    row-range groups, routes them through the Pallas ``pack_rows`` /
-    ``unpack_rows`` kernels (interpret / reference mode on CPU) with a
-    ``device_put`` + dynamic-update-slice fallback.
-  * :class:`OverlapSession`  — overlapped layer streaming for the live
-    controller: K layers per iteration boundary (pre-copy), dirty-layer
-    re-sync, residual-tail commit (DESIGN.md §9).
+    row-range groups, and moves each staging batch as a small fixed
+    number of compiled programs — Pallas ``pack_rows`` gather, staged
+    ``device_put``, overwrite-semantics ``scatter_rows`` into the
+    donated destination carry (interpret / reference mode on CPU) —
+    with a ``device_put`` + dynamic-update-slice path for contiguous
+    runs and generic cells. Dispatch-only: callers own every barrier.
+  * :class:`OverlapSession`  — asynchronous, double-buffered layer
+    streaming for the live controller: K layers dispatched per
+    iteration boundary (pre-copy), at most one round's scatters in
+    flight, dirty-layer re-sync overlapped with the final grad
+    computation, single drain at commit (DESIGN.md §9).
 
 See DESIGN.md §9 for the architecture and the commit protocol.
 """

@@ -36,6 +36,15 @@ class StreamStats:
     # moves each deduplicated region once; the sim oracle moves per-rank)
     executed_bytes: int = 0
     seconds: float = 0.0
+    # host time spent issuing the round's device programs (engine loop) vs
+    # waiting for them to land — the async data plane's win is dispatch
+    # shrinking while drain overlaps useful work. Filled by the engine
+    # (dispatch) and whichever caller performs the blocking wait (drain).
+    dispatch_seconds: float = 0.0
+    drain_seconds: float = 0.0
+    # cells that fell off the row-merge fast path onto the generic per-cell
+    # fallback (surfaced so slow-path regressions show up in benchmarks)
+    generic_cells: int = 0
 
     def assert_bounded(self, budget: int) -> None:
         assert self.peak_staging_bytes <= budget, (
@@ -56,6 +65,9 @@ class StreamStats:
             self.per_layer_bytes[k] = self.per_layer_bytes.get(k, 0) + v
         self.executed_bytes += other.executed_bytes
         self.seconds += other.seconds
+        self.dispatch_seconds += other.dispatch_seconds
+        self.drain_seconds += other.drain_seconds
+        self.generic_cells += other.generic_cells
 
 
 class Executor(Protocol):
@@ -110,14 +122,23 @@ class ReshardEngine:
             for name, ll in last_layer.items():
                 releasable.setdefault(ll, []).append(name)
         exec0 = getattr(self.executor, "executed_bytes", 0)
+        gen0 = getattr(self.executor, "generic_cells", 0)
+        wait0 = getattr(self.executor, "stage_wait_seconds", 0.0)
         for layer in run_layers:
             self.run_layer(layer, stats)
             for name in releasable.get(layer, ()):
                 release(name)
         stats.seconds = time.perf_counter() - t0
+        # the engine loop only *issues* work on an async backend — except
+        # staging backpressure, which the executor self-reports so those
+        # blocked seconds land on the drain side of the attribution
+        waited = getattr(self.executor, "stage_wait_seconds", 0.0) - wait0
+        stats.dispatch_seconds = stats.seconds - waited
+        stats.drain_seconds += waited
         # delta, not lifetime total: the same executor may serve many runs
         # (overlap pre-copy rounds) and per-run stats are merged downstream
         stats.executed_bytes = getattr(self.executor, "executed_bytes", 0) - exec0
+        stats.generic_cells = getattr(self.executor, "generic_cells", 0) - gen0
         return stats
 
     def run_layer(self, layer: int, stats: StreamStats) -> None:

@@ -10,19 +10,38 @@ per-(tensor, destination-rank); on live arrays the same bytes exist once,
 so the executor deduplicates replica fan-out, merges each layer's cells
 into row-range groups on the stacked dim, and moves them:
 
-  * scattered rows  -> Pallas ``pack_rows`` gather into a contiguous
-    staging buffer, ``device_put`` onto the target mesh, then per-run
-    overwrite scatter into the destination storage (idempotent, so dirty
-    layers can re-stream),
+  * scattered rows  -> ONE compiled program chain per staging batch:
+    Pallas ``pack_rows`` gather into a contiguous staging buffer, one
+    staged ``device_put`` onto the target mesh, one overwrite-semantics
+    ``scatter_rows`` into the (donated) destination carry. Overwrite makes
+    re-streaming a dirty layer idempotent; the fused form replaces the
+    per-run dynamic-update-slice chain that used to cost O(runs) host
+    dispatches per batch.
   * contiguous runs -> slice + ``device_put`` + donated
-    dynamic-update-slice (the fallback path; also used for cells that do
-    not decompose into full-width rows).
+    dynamic-update-slice (already a 3-dispatch path; also used for cells
+    that do not decompose into full-width rows).
 
-Destination storage is pre-allocated with the target sharding (required
-for training regardless — Theorem 1, item 2); staging is bounded by the
-engine's budget. On TPU backends ``ops.pack_rows``/``unpack_rows`` run the
-Pallas kernels natively; on CPU they run the jnp reference (or interpret
-mode under ``REPRO_FORCE_PALLAS_INTERPRET=1``).
+Destination carries are allocated device-side under the target sharding
+(jitted sharded ``jnp.zeros`` — no host materialization or host->device
+round trip of the full buffer). All jit helpers live in module-level
+caches keyed by destination sharding, so retraces are cached per shape
+family across executor instances and streaming rounds.
+
+Everything the executor emits is an *async dispatch*: nothing here waits
+on destination writes. The only waits are staging backpressure — at most
+two staged buffers stay pinned (double buffering; ``_stage`` waits on the
+oldest beyond that, whose consumer is already dispatched, so a full plan's
+staging can never accumulate on device) — and the explicit round hooks:
+callers that pipeline rounds use ``begin_round``/``sync_staging``/
+``round_touched``, where ``sync_staging`` waits only until this round's
+staged buffers are materialized (after which the round no longer reads its
+source leaves and they are safe to donate to the next train step), while
+the scatters into the destination carries keep draining in the background.
+
+Staging is bounded by the engine's budget. On TPU backends
+``ops.pack_rows``/``scatter_rows`` run the Pallas kernels natively; on CPU
+they run the jnp reference (or interpret mode under
+``REPRO_FORCE_PALLAS_INTERPRET=1``).
 """
 
 from __future__ import annotations
@@ -68,10 +87,45 @@ class SimExecutor:
 # Live backend
 # ---------------------------------------------------------------------------
 
+# Module-level jit caches: shared across executor instances and streaming
+# rounds so every round after the first hits warm executables. _DUS0/_DUS_ND
+# rely on jax.jit's own per-shape cache; zeros/scatter need explicit
+# out_shardings (a trace-time constant), so they are additionally keyed by
+# the destination sharding. Bounded: an elastic job cycles through many
+# world configurations, and an unbounded cache would pin every historical
+# mesh (and its executables) for process lifetime.
+_ZEROS_CACHE: dict = {}
+_SCATTER_CACHE: dict = {}
+_JIT_CACHE_MAX = 64
+
+
+def _cache_put(cache: dict, key, fn):
+    if len(cache) >= _JIT_CACHE_MAX:
+        cache.pop(next(iter(cache)))  # FIFO: oldest shape family retraces
+    cache[key] = fn
+    return fn
+
+
+def _await_staged(buf) -> float:
+    """Wait for a staged buffer unless it was already deleted: a staged
+    device_put with a matching layout returns its input array, which the
+    plan-less path's ``release`` may legitimately delete — only ever after
+    the consuming destination drained, so a deleted buffer means 'done'.
+    Returns the seconds spent blocked (drain-side time, not dispatch)."""
+    import time
+
+    if hasattr(buf, "block_until_ready") and not (
+        hasattr(buf, "is_deleted") and buf.is_deleted()
+    ):
+        t0 = time.perf_counter()
+        buf.block_until_ready()
+        return time.perf_counter() - t0
+    return 0.0
+
 
 def _jit_helpers():
     """Module-level jitted copy helpers (cached across executor instances)."""
-    global _DUS0, _DUS_ND
+    global _DUS0, _DUS_ND, _PACK2D
     if "_DUS0" in globals():
         return
     import jax
@@ -91,12 +145,68 @@ def _jit_helpers():
         donate_argnums=(0,),
     )
 
+    def _pack2d(leaf, starts):
+        from repro.kernels import ops
+
+        return ops.pack_rows(leaf.reshape(leaf.shape[0], -1), starts, 1)
+
+    # collapse-to-2D + row gather as one compiled program on the source mesh
+    # (caches per (leaf shape, starts length) family)
+    _PACK2D = jax.jit(_pack2d)
+
+
+def _zeros_fn(shape: tuple, dtype: str, sharding):
+    """Jitted device-side allocation of a zeroed carry directly under the
+    target sharding — the old host-side ``jnp.zeros`` + ``device_put``
+    double-materialized every destination tensor."""
+    key = (shape, dtype, sharding)
+    fn = _ZEROS_CACHE.get(key)
+    if fn is None:
+        import jax
+        import jax.numpy as jnp
+
+        fn = _cache_put(
+            _ZEROS_CACHE,
+            key,
+            jax.jit(lambda: jnp.zeros(shape, dtype), out_shardings=sharding),
+        )
+    return fn
+
+
+def _scatter_fn(sharding):
+    """Jitted fused overwrite-scatter: collapse the carry to 2-D, scatter
+    the packed row buffer at the given offsets, restore the carry shape.
+    The carry is donated and the output pinned to the destination sharding
+    (reshape round-trips must not let GSPMD re-decide the layout).
+    jax.jit caches traces per (carry, buf, starts) shape family underneath
+    the per-sharding entry."""
+    fn = _SCATTER_CACHE.get(sharding)
+    if fn is None:
+        import jax
+
+        def f(carry, buf, starts):
+            from repro.kernels import ops
+
+            c2 = carry.reshape(carry.shape[0], -1)
+            c2 = ops.scatter_rows(c2, buf, starts, 1)
+            return c2.reshape(carry.shape)
+
+        fn = _cache_put(
+            _SCATTER_CACHE,
+            sharding,
+            jax.jit(f, donate_argnums=(0,), out_shardings=sharding),
+        )
+    return fn
+
 
 class LiveExecutor:
     """Execute plan regions on live jax.Arrays.
 
     src: {tensor name: global jax.Array on the source mesh}
     target_shardings: {tensor name: Sharding on the target mesh}
+    fused: route scattered-row batches through the pack -> staged put ->
+        overwrite-scatter program chain (default); ``False`` keeps the
+        legacy per-run dynamic-update-slice chain (benchmark baseline).
     """
 
     def __init__(
@@ -106,6 +216,7 @@ class LiveExecutor:
         target_shardings: dict[str, Any],
         staging_bytes: int,
         free_sources: bool = False,
+        fused: bool = True,
     ):
         import jax
         import jax.numpy as jnp
@@ -117,11 +228,20 @@ class LiveExecutor:
         self.target_shardings = target_shardings
         self.staging_bytes = staging_bytes
         self.free_sources = free_sources
+        self.fused = fused
         self.dst: dict[str, Any] = {}
         self.executed_bytes = 0
         self.generic_cells = 0  # cells that fell off the row-merge fast path
+        # blocking time spent in staging backpressure — drain-side wall
+        # clock; the engine subtracts its delta from the loop time so
+        # dispatch_seconds stays pure dispatch
+        self.stage_wait_seconds = 0.0
         self._seen: set[tuple] = set()
         self._cells: dict[str, list[TransferTask]] = {}
+        # async round tracking: staged buffers whose readiness implies this
+        # round's source reads completed, and the dst names it touched
+        self._round_staged: list[Any] = []
+        self._round_touched: set[str] = set()
         # destinations produced by a bare device_put may ALIAS source
         # buffers on devices common to both meshes — deleting such sources
         # would poison the destination (these are scalars; skip the free)
@@ -189,6 +309,44 @@ class LiveExecutor:
         re-streamed (dirty re-sync), so the replica-dedupe set resets."""
         self._seen = set()
 
+    # -- async round protocol -------------------------------------------
+    def begin_round(self) -> None:
+        """Open a dispatch round: forget the previous round's staged-buffer
+        and touched-destination bookkeeping (NOT the replica-dedupe set —
+        see ``reset_round``)."""
+        self._round_staged = []
+        self._round_touched = set()
+
+    def round_touched(self) -> set[str]:
+        """Destination tensors this round dispatched writes into."""
+        return set(self._round_touched)
+
+    def _stage(self, buf):
+        """Track a staged buffer, keeping at most two pinned (double
+        buffering). Beyond that the oldest is waited on and dereferenced;
+        per-device program order then frees it as soon as its (already
+        dispatched) consumer retires. Live staging is therefore bounded by
+        a small constant multiple of the budget — ~3 chunks: two pinned
+        here plus at most one whose consumer is still retiring — not by
+        the plan size; callers that never round-sync (the stop-copy paths)
+        cannot accumulate a whole plan's staging on device. (The engine's
+        ``peak_staging_bytes`` accounts the logical per-flush bound; this
+        constant factor is the pipelining price on top.)"""
+        self._round_staged.append(buf)
+        if len(self._round_staged) > 2:
+            self.stage_wait_seconds += _await_staged(self._round_staged.pop(0))
+        return buf
+
+    def sync_staging(self) -> None:
+        """Block until this round's staged buffers are materialized. A
+        staged buffer being ready implies the pack/slice that produced it
+        — i.e. every read of this round's SOURCE leaves — has completed,
+        so the caller may let the training step donate those sources while
+        the scatters into the destination carries keep draining."""
+        for buf in self._round_staged:
+            self.stage_wait_seconds += _await_staged(buf)
+        self._round_staged = []
+
     # -- engine protocol ------------------------------------------------
     def begin_layer(self, layer: int) -> None:
         self._cells = {}
@@ -209,19 +367,23 @@ class LiveExecutor:
     def _dst_carry(self, name: str):
         if name not in self.dst:
             spec = self.specs[name]
-            zeros = self._jnp.zeros(spec.shape, spec.dtype)
-            self.dst[name] = self._jax.device_put(
-                zeros, self.target_shardings[name]
-            )
+            # allocated directly under the target sharding inside jit: no
+            # host-side zeros buffer, no host->device transfer of the full
+            # tensor, and the executable is cached per shape family
+            self.dst[name] = _zeros_fn(
+                spec.shape, spec.dtype, self.target_shardings[name]
+            )()
         return self.dst[name]
 
     def _move_tensor(self, name: str, cells: list[TransferTask]) -> None:
         spec = self.specs[name]
         leaf = self.src[name]
+        self._round_touched.add(name)
         if leaf.ndim == 0:
             self.dst[name] = self._jax.device_put(
                 leaf, self.target_shardings[name]
             )
+            self._stage(self.dst[name])
             self._no_release.add(name)
             self.executed_bytes += spec.nbytes
             return
@@ -243,10 +405,8 @@ class LiveExecutor:
         jnp, jax = self._jnp, self._jax
         spec = self.specs[name]
         leaf = self.src[name]
-        R = spec.shape[0]
         tail = spec.shape[1:]
-        C = int(math.prod(tail)) if tail else 1
-        per_row = spec.nbytes // R
+        per_row = spec.nbytes // spec.shape[0]
         carry = self._dst_carry(name)
         max_rows = rows_per_budget(per_row, self.staging_bytes)
         for i in range(0, len(rows), max_rows):
@@ -259,19 +419,35 @@ class LiveExecutor:
                     leaf[lo:hi], self._stage_sharding(name, chunk_shape)
                 )
                 carry = _DUS0(carry, chunk, lo)
+                self._stage(chunk)
+            elif self.fused:
+                # scattered rows (dirty-layer re-sync): one pack on the
+                # source mesh, one staged put, one overwrite scatter into
+                # the donated carry — 3 dispatches per batch instead of
+                # O(runs). (An accumulate scatter would be cheaper on TPU
+                # but is NOT idempotent: re-streaming a dirty layer would
+                # compound onto the stale pre-copied value.)
+                starts = jnp.asarray(batch, jnp.int32)
+                buf = jax.device_put(
+                    _PACK2D(leaf, starts), self._replicated_sh
+                )
+                starts_dev = jax.device_put(starts, self._replicated_sh)
+                carry = _scatter_fn(self.target_shardings[name])(
+                    carry, buf, starts_dev
+                )
+                self._stage(buf)
             else:
-                # scattered rows (dirty-layer re-sync): gather through the
-                # pack kernel into one contiguous staging buffer, then
-                # scatter each run back with overwrite semantics. (An
-                # unpack_rows + add scatter would be cheaper but is NOT
-                # idempotent: re-streaming a dirty layer would accumulate
-                # onto the stale pre-copied value instead of replacing it.)
+                # legacy baseline (bench_dataplane's "per-run DUS" path):
+                # pack once, then per-run slice + dynamic-update-slice
                 from repro.kernels import ops
 
+                R = spec.shape[0]
+                C = int(math.prod(tail)) if tail else 1
                 src2d = leaf.reshape(R, C)
                 starts = jnp.asarray(batch, jnp.int32)
                 buf = ops.pack_rows(src2d, starts, 1)
                 buf = jax.device_put(buf, self._replicated_sh)
+                self._stage(buf)
                 off = 0
                 for lo, hi in runs:
                     k = hi - lo
@@ -291,6 +467,7 @@ class LiveExecutor:
         )
         starts = self._jnp.asarray([lo for lo, _ in cell.bounds], self._jnp.int32)
         self.dst[name] = _DUS_ND(carry, chunk, starts)
+        self._stage(chunk)
         self.executed_bytes += cell.nbytes
 
     # -- results --------------------------------------------------------
@@ -299,6 +476,7 @@ class LiveExecutor:
         return self.dst
 
     def block_until_ready(self) -> None:
+        self._round_staged = []
         for v in self.dst.values():
             v.block_until_ready()
 

@@ -9,6 +9,17 @@ re-syncs only the dirty set at commit time — ideally overlapped with the
 final gradient computation, so the blocking pause shrinks to the residual
 tail plus the pointer swap.
 
+Rounds are **asynchronous and double-buffered**: ``stream_next`` only
+dispatches a round's pack/put/scatter programs, then (a) waits for the
+round's *staging* buffers to materialize — the point after which the round
+no longer reads its source leaves, so the next train step may donate them
+— and (b) drains the round-before-last's destination writes, keeping at
+most one round's scatters in flight. The full barrier exists only at
+``resync``/``drain`` (commit). The invariant that makes this safe: a
+staging buffer is reusable (and its sources donatable) only after the
+scatter consuming it has been *dispatched* — which ``stream_next``
+guarantees by ordering the scatter dispatch before ``sync_staging``.
+
 Note the honest limit: under a dense optimizer (AdamW updates every
 element every step) a pre-copied layer is always dirty by commit, so
 pre-copy rounds cannot reduce commit *bytes* — what shrinks the pause is
@@ -40,6 +51,11 @@ class OverlapReport:
     resync_layers: int = 0
     resync_bytes: int = 0
     resync_seconds: float = 0.0
+    # dispatch-vs-drain attribution across all rounds (pre-copy + re-sync):
+    # dispatch = host time issuing device programs, drain = blocking waits
+    # (staging syncs, double-buffer backpressure, final commit drain)
+    dispatch_seconds: float = 0.0
+    drain_seconds: float = 0.0
 
     @property
     def total_bytes(self) -> int:
@@ -59,6 +75,7 @@ class OverlapSession:
         target_shardings: dict[str, Any],
         staging_bytes: int,
         stream_k: int = 4,
+        max_inflight_rounds: int = 2,
     ):
         self.spec_map = {s.name: s for s in specs}
         self.plan = plan
@@ -67,10 +84,14 @@ class OverlapSession:
         )
         self.engine = ReshardEngine(plan, self.executor, staging_bytes)
         self.stream_k = max(1, stream_k)
+        self.max_inflight_rounds = max(1, max_inflight_rounds)
         self.pending: list[int] = self.engine.layers()
         self.streamed_at: dict[int, int] = {}
         self.stats = StreamStats()
         self.report = OverlapReport()
+        # rounds whose destination writes may still be in flight: each
+        # entry is the set of tensor names the round touched
+        self._inflight: list[set[str]] = []
 
     @property
     def done_precopy(self) -> bool:
@@ -81,43 +102,105 @@ class OverlapSession:
         return sorted(l for l, s in self.streamed_at.items() if s < step)
 
     # ------------------------------------------------------------------
+    def _drain_rounds(self, keep: int) -> float:
+        """Block until all but the newest ``keep`` rounds' destination
+        writes have landed. Later rounds donate earlier carries, so
+        round-granular handles cannot be kept; tensors a newer in-flight
+        round re-touched are skipped — their current dst leaf is the newer
+        round's output, and waiting on it would degenerate double buffering
+        into a full per-round barrier for stacked tensors that span every
+        round. Those tensors' backpressure comes from the executor's
+        bounded staging instead (per-device program order retires their
+        scatters before anything newer)."""
+        t0 = time.perf_counter()
+        while len(self._inflight) > keep:
+            names = self._inflight.pop(0)
+            for newer in self._inflight:
+                names -= newer
+            for n in names:
+                leaf = self.executor.dst.get(n)
+                if leaf is not None and hasattr(leaf, "block_until_ready"):
+                    leaf.block_until_ready()
+        return time.perf_counter() - t0
+
+    def drain(self) -> float:
+        """Full barrier: every dispatched round has landed. The only sync
+        points are here and in ``resync`` — commit-time calls."""
+        dt = self._drain_rounds(0)
+        t0 = time.perf_counter()
+        self.executor.block_until_ready()
+        return dt + (time.perf_counter() - t0)
+
+    # ------------------------------------------------------------------
     def stream_next(self, src_leaves: dict[str, Any], step: int) -> int:
-        """One pre-copy round at an iteration boundary: stream the next K
-        pending layers from the current state. Returns layers streamed."""
+        """One pre-copy round at an iteration boundary: dispatch the next K
+        pending layers from the current state, wait only until the round's
+        staging is materialized (sources safe to donate) and the
+        round-before-last has drained (double buffering). Returns layers
+        streamed."""
         if not self.pending:
             return 0
         batch, self.pending = self.pending[: self.stream_k], self.pending[self.stream_k :]
         self.executor.update_sources(src_leaves)
+        self.executor.begin_round()
         t0 = time.perf_counter()
         s = self.engine.run(batch)
-        self.executor.block_until_ready()
-        dt = time.perf_counter() - t0
+        dispatch_dt = time.perf_counter() - t0
+        self._inflight.append(self.executor.round_touched())
+        t1 = time.perf_counter()
+        self.executor.sync_staging()
+        drain_dt = time.perf_counter() - t1
+        drain_dt += self._drain_rounds(self.max_inflight_rounds - 1)
+        s.drain_seconds += drain_dt
         self.stats.merge(s)
         for l in batch:
             self.streamed_at[l] = step
         self.report.precopy_rounds += 1
         self.report.precopy_bytes += s.network_bytes + s.local_bytes
-        self.report.precopy_seconds += dt
+        self.report.precopy_seconds += dispatch_dt + drain_dt
+        # the engine self-reports pure dispatch; staging backpressure hit
+        # inside its loop belongs on the drain side
+        self.report.dispatch_seconds += s.dispatch_seconds
+        self.report.drain_seconds += drain_dt + max(
+            0.0, dispatch_dt - s.dispatch_seconds
+        )
         return len(batch)
 
-    def resync(self, src_leaves: dict[str, Any], step: int) -> StreamStats:
+    def resync(
+        self, src_leaves: dict[str, Any], step: int, drain: bool = True
+    ) -> StreamStats:
         """Re-stream every dirty layer (plus any remaining pending tail)
         from the boundary-consistent state at ``step``. After this, the
-        destination holds a byte-exact copy of the step-``step`` cut."""
+        destination holds a byte-exact copy of the step-``step`` cut.
+        With ``drain=False`` only the dispatch (and the staging sync that
+        frees the sources) happens — the caller overlaps the scatter drain
+        with other work and must call :meth:`drain` before consuming
+        :meth:`results`."""
         layers = sorted(set(self.dirty_layers(step)) | set(self.pending))
         self.pending = []
         self.executor.update_sources(src_leaves)
         self.executor.reset_round()
+        self.executor.begin_round()
         t0 = time.perf_counter()
         s = self.engine.run(layers)
-        self.executor.block_until_ready()
-        dt = time.perf_counter() - t0
+        dispatch_dt = time.perf_counter() - t0
+        self._inflight.append(self.executor.round_touched())
+        t1 = time.perf_counter()
+        self.executor.sync_staging()
+        drain_dt = time.perf_counter() - t1
+        if drain:
+            drain_dt += self.drain()
+        s.drain_seconds += drain_dt
         self.stats.merge(s)
         for l in layers:
             self.streamed_at[l] = step
         self.report.resync_layers += len(layers)
         self.report.resync_bytes += s.network_bytes + s.local_bytes
-        self.report.resync_seconds += dt
+        self.report.resync_seconds += dispatch_dt + drain_dt
+        self.report.dispatch_seconds += s.dispatch_seconds
+        self.report.drain_seconds += drain_dt + max(
+            0.0, dispatch_dt - s.dispatch_seconds
+        )
         return s
 
     def results(self) -> dict[str, Any]:

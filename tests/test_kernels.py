@@ -11,7 +11,11 @@ from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.reshard_pack import pack_rows_pallas, unpack_rows_pallas
+from repro.kernels.reshard_pack import (
+    pack_rows_pallas,
+    scatter_rows_pallas,
+    unpack_rows_pallas,
+)
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssd_scan import ssd_intra_chunk_pallas
 
@@ -161,3 +165,81 @@ def test_pack_unpack_roundtrip(data):
         np.testing.assert_array_equal(
             np.asarray(un[st_ : st_ + block]), np.asarray(src[st_ : st_ + block])
         )
+
+
+# ---------------------------------------------------------------------------
+# scatter_rows: overwrite-semantics scatter (the live re-sync fast path)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_scatter_rows_property(data):
+    """Pallas (interpret) == jnp oracle == manual numpy overwrite, including
+    preservation of every destination row NOT named by the offset table
+    (the input_output_aliases carry-through)."""
+    nb = data.draw(st.integers(1, 6))
+    block = data.draw(st.sampled_from([1, 8]))
+    R = block * data.draw(st.integers(max(nb, 2), 12))
+    starts = data.draw(
+        st.lists(
+            st.integers(0, R // block - 1), min_size=nb, max_size=nb, unique=True
+        )
+    )
+    starts = jnp.asarray([s * block for s in starts], jnp.int32)
+    dst = _rand((R, 128))
+    buf = _rand((nb * block, 128))
+    out_p = scatter_rows_pallas(dst, buf, starts, block, interpret=True)
+    out_r = ref.scatter_rows_ref(dst, buf, starts, block)
+    exp = np.asarray(dst).copy()
+    for i, s in enumerate(np.asarray(starts)):
+        exp[s : s + block] = np.asarray(buf)[i * block : (i + 1) * block]
+    np.testing.assert_array_equal(np.asarray(out_r), exp)
+    np.testing.assert_array_equal(np.asarray(out_p), exp)
+
+
+def test_scatter_rows_duplicate_starts_last_wins():
+    """Both paths resolve duplicate offsets sequentially (last block wins) —
+    the deterministic tie-break the oracle's fori_loop defines."""
+    dst = _rand((16, 128))
+    buf = _rand((3, 128))
+    starts = jnp.asarray([4, 4, 9], jnp.int32)
+    exp = np.asarray(dst).copy()
+    exp[4] = np.asarray(buf)[1]
+    exp[9] = np.asarray(buf)[2]
+    np.testing.assert_array_equal(
+        np.asarray(ref.scatter_rows_ref(dst, buf, starts, 1)), exp
+    )
+    np.testing.assert_array_equal(
+        np.asarray(scatter_rows_pallas(dst, buf, starts, 1, interpret=True)), exp
+    )
+
+
+def test_scatter_rows_idempotent():
+    """Overwrite semantics: re-applying the same scatter is a no-op (the
+    dirty-layer re-stream invariant; an accumulate scatter would fail this)."""
+    dst = _rand((24, 128))
+    buf = _rand((4, 128))
+    starts = jnp.asarray([2, 7, 11, 21], jnp.int32)
+    once = ref.scatter_rows_ref(dst, buf, starts, 1)
+    twice = ref.scatter_rows_ref(once, buf, starts, 1)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+    once_p = scatter_rows_pallas(dst, buf, starts, 1, interpret=True)
+    twice_p = scatter_rows_pallas(once_p, buf, starts, 1, interpret=True)
+    np.testing.assert_array_equal(np.asarray(once_p), np.asarray(twice_p))
+
+
+def test_pack_then_scatter_roundtrip():
+    """ops-level dispatch: pack_rows o scatter_rows restores the gathered
+    rows into a different destination exactly (the executor's fused path)."""
+    from repro.kernels import ops
+
+    src = _rand((32, 128))
+    dst = _rand((32, 128))
+    rows = jnp.asarray([1, 4, 5, 9, 30], jnp.int32)
+    buf = ops.pack_rows(src, rows, 1)
+    out = ops.scatter_rows(dst, buf, rows, 1)
+    exp = np.asarray(dst).copy()
+    for r in np.asarray(rows):
+        exp[r] = np.asarray(src)[r]
+    np.testing.assert_array_equal(np.asarray(out), exp)

@@ -110,6 +110,85 @@ def test_live_matches_sim_across_reshapes(subproc):
     assert out.count("BACKEND_PARITY_OK") == 5
 
 
+def test_stream_stats_surface_dispatch_drain_and_generic_cells():
+    """The async data plane's accounting fields merge like the others, so
+    per-round stats keep attributing dispatch-vs-drain after aggregation."""
+    from repro.reshard import StreamStats
+
+    a = StreamStats(dispatch_seconds=0.25, drain_seconds=0.5, generic_cells=2)
+    b = StreamStats(dispatch_seconds=0.75, drain_seconds=1.0, generic_cells=3)
+    a.merge(b)
+    assert a.dispatch_seconds == 1.0
+    assert a.drain_seconds == 1.5
+    assert a.generic_cells == 5
+
+
+def test_scattered_restream_idempotent_vs_sim(subproc):
+    """The fused pack -> staged put -> overwrite-scatter path on a scattered
+    row set (the dirty re-sync workload): re-streaming the same dirty layer
+    twice must be bit-exact, stay off the generic fallback, and match the
+    SimExecutor byte oracle's destination shard."""
+    out = subproc(
+        """
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.core.intersection import TransferPlan, TransferTask
+        from repro.core.resource_view import TensorSpec
+        from repro.core.streaming import RankStore
+        from repro.reshard import LiveExecutor, ReshardEngine, SimExecutor
+
+        R, C = 32, 256
+        spec = TensorSpec("params/w", (R, C), "float32", ("none", "none"),
+                          "all", "params")
+        rows = [1, 3, 4, 8, 13, 21, 22, 30]  # scattered: multi-run batches
+        plan = TransferPlan(tasks=[
+            TransferTask(tensor=spec.name, collection="params", src_rank=0,
+                         dst_rank=1, bounds=((r, r + 1), (0, C)),
+                         src_offset=(r, 0), dst_offset=(r, 0),
+                         nbytes=C * 4, layer=0)
+            for r in rows], cfg_src=None, cfg_dst=None)
+        budget = C * 4 * 3  # 3 rows per staging batch: mixed run shapes
+
+        rng = np.random.default_rng(0)
+        v0 = rng.normal(size=(R, C)).astype(np.float32)
+        v1 = v0 + 1.0  # "optimizer stepped": the layer is dirty
+
+        # byte oracle: simulated ranks moving v1
+        src_s = RankStore(0); src_s.shards[spec.name] = v1.copy()
+        dst_s = RankStore(1); dst_s.shards[spec.name] = np.zeros((R, C), np.float32)
+        ReshardEngine(plan, SimExecutor({0: src_s}, {1: dst_s}),
+                      staging_bytes=budget).run()
+
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+        sh = NamedSharding(mesh, P(None, "model"))
+        def leaves(v):
+            return {spec.name: jax.device_put(jnp.asarray(v), sh)}
+
+        ex = LiveExecutor({spec.name: spec}, leaves(v0), {spec.name: sh}, budget)
+        eng = ReshardEngine(plan, ex, staging_bytes=budget)
+        s0 = eng.run(); ex.block_until_ready()
+        got0 = np.asarray(jax.device_get(ex.results()[spec.name]))
+        exp0 = np.zeros((R, C), np.float32); exp0[rows] = v0[rows]
+        np.testing.assert_array_equal(got0, exp0)
+        assert s0.generic_cells == 0, s0.generic_cells  # stayed on fast path
+        assert s0.dispatch_seconds > 0.0
+
+        # dirty re-stream twice from the SAME post-step sources: overwrite
+        # semantics => bit-identical both times, equal to the sim oracle
+        for attempt in range(2):
+            ex.update_sources(leaves(v1)); ex.reset_round()
+            eng.run(); ex.block_until_ready()
+            got = np.asarray(jax.device_get(ex.results()[spec.name]))
+            exp1 = np.zeros((R, C), np.float32); exp1[rows] = v1[rows]
+            np.testing.assert_array_equal(got, exp1, err_msg=f"pass{attempt}")
+            np.testing.assert_array_equal(got, dst_s.shards[spec.name])
+        print("IDEMPOTENT_OK")
+        """,
+        n_devices=8,
+    )
+    assert "IDEMPOTENT_OK" in out
+
+
 def test_dirty_resync_is_byte_exact(subproc):
     """The one-step-stale failure class: pre-copy all layers, mutate the
     sources (as an optimizer step would), re-sync the dirty set — the
