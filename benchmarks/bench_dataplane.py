@@ -19,10 +19,9 @@ unless the fused path is strictly faster than the per-run DUS path.
 from __future__ import annotations
 
 import json
-import os
 import sys
 
-from benchmarks.common import RESULTS, emit, run_with_devices
+from benchmarks.common import emit, run_with_devices, write_results
 
 _SNIPPET = """
 import json, time
@@ -151,16 +150,14 @@ def main(argv=()) -> None:
         if line.startswith("JSON "):
             payload = json.loads(line[5:])
     assert payload is not None, f"no JSON payload in bench output:\n{out[-2000:]}"
-    payload["mode"] = "smoke" if smoke else "full"
     payload["fused_faster"] = (
         payload["round_scattered"]["fused_ms"]
         < payload["round_scattered"]["legacy_dus_ms"]
     )
 
-    os.makedirs(RESULTS, exist_ok=True)
-    path = os.path.join(RESULTS, "BENCH_dataplane.json")
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2)
+    path = write_results(
+        "dataplane", payload, mode="smoke" if smoke else "full"
+    )
 
     k, r, o = payload["kernel"], payload["round_scattered"], payload["overlap"]
     emit("dataplane/pack", k["pack_ms"] * 1e3, f"{k['pack_gbps']:.2f}GB/s")

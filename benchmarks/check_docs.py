@@ -1,0 +1,119 @@
+"""Docs CI job (ISSUE 4): the README's commands must parse and its artifact
+references must resolve.
+
+Checks, in order:
+  1. ``compileall`` over examples/, benchmarks/ and src/ — every code block
+     in the README points at one of these trees;
+  2. ``--help`` smoke of the launchers the quickstart names (they must not
+     crash at import/argparse time);
+  3. every ``results/BENCH_*.json`` referenced anywhere in README.md either
+     exists on disk or is covered by .gitignore (benchmark artifacts are
+     regenerated per run, never committed — a reference that is neither
+     present nor ignored is a stale doc).
+"""
+
+from __future__ import annotations
+
+import compileall
+import fnmatch
+import os
+import re
+import subprocess
+import sys
+
+from benchmarks.common import REPO, SRC
+
+
+def check_compile() -> None:
+    for tree in ("examples", "benchmarks", "src"):
+        path = os.path.join(REPO, tree)
+        ok = compileall.compile_dir(path, quiet=1, force=False)
+        if not ok:
+            raise SystemExit(f"compileall failed under {tree}/")
+    print("compileall OK: examples/ benchmarks/ src/")
+
+
+def check_help_smoke() -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", "--help"],
+        capture_output=True, text=True, env=env, timeout=300,
+    )
+    if r.returncode != 0 or "--overlap" not in r.stdout:
+        raise SystemExit(
+            f"launch/train.py --help smoke failed (rc={r.returncode}):\n"
+            f"{r.stderr[-2000:]}"
+        )
+    print("launch/train.py --help OK")
+
+
+def _gitignore_patterns() -> list[str]:
+    path = os.path.join(REPO, ".gitignore")
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line and not line.startswith("#"):
+                out.append(line.rstrip("/"))
+    return out
+
+
+def _ignored(rel: str, patterns: list[str]) -> bool:
+    parts = rel.split("/")
+    for pat in patterns:
+        if fnmatch.fnmatch(rel, pat) or any(
+            fnmatch.fnmatch(p, pat) for p in parts
+        ):
+            return True
+        # directory pattern: any prefix of the path
+        for i in range(1, len(parts)):
+            if fnmatch.fnmatch("/".join(parts[:i]), pat):
+                return True
+    return False
+
+
+def check_artifact_references() -> None:
+    readme = os.path.join(REPO, "README.md")
+    if not os.path.exists(readme):
+        raise SystemExit("README.md missing")
+    with open(readme) as f:
+        text = f.read()
+    refs = sorted(set(re.findall(r"results/BENCH_\w+\.json", text)))
+    if not refs:
+        raise SystemExit("README.md references no BENCH artifacts")
+    patterns = _gitignore_patterns()
+    bad = [
+        r
+        for r in refs
+        if not os.path.exists(os.path.join(REPO, r)) and not _ignored(r, patterns)
+    ]
+    if bad:
+        raise SystemExit(f"README references unresolvable artifacts: {bad}")
+    # and each referenced artifact must have a generating bench module
+    missing = [
+        r
+        for r in refs
+        if not os.path.exists(
+            os.path.join(
+                REPO, "benchmarks",
+                "bench_" + r.split("BENCH_")[1].split(".")[0] + ".py",
+            )
+        )
+    ]
+    if missing:
+        raise SystemExit(f"README artifacts with no generating bench: {missing}")
+    print(f"artifact references OK: {refs}")
+
+
+def main(argv=()) -> None:
+    check_compile()
+    check_help_smoke()
+    check_artifact_references()
+    print("DOCS_OK")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

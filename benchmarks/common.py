@@ -1,7 +1,16 @@
-"""Shared benchmark helpers: CSV emission + multi-device subprocess runner."""
+"""Shared benchmark helpers: CSV emission, the ``BENCH_*.json`` artifact
+envelope, and the multi-device subprocess runner.
+
+Output contract (documented for trajectory tooling in results/README.md):
+``emit`` prints one ``name,us_per_call,derived`` CSV row per metric;
+``write_results`` persists a benchmark's structured payload under
+``results/BENCH_<name>.json`` with a standard envelope so artifacts are
+self-describing across runs.
+"""
 
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -12,9 +21,31 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 RESULTS = os.path.join(REPO, "results")
 
+# bump when the envelope fields below change shape
+RESULTS_SCHEMA = 1
+
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.1f},{derived}", flush=True)
+
+
+def write_results(name: str, payload: dict, mode: str | None = None) -> str:
+    """Persist ``results/BENCH_<name>.json`` with the standard envelope
+    (schema in results/README.md) and return the path. ``mode`` tags the
+    run variant (e.g. "smoke" vs "full")."""
+    doc = {
+        "bench": name,
+        "schema": RESULTS_SCHEMA,
+        "unix_time": time.time(),
+    }
+    if mode is not None:
+        doc["mode"] = mode
+    doc.update(payload)
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, default=str)
+    return path
 
 
 def run_with_devices(code: str, n_devices: int = 8, timeout: int = 1200) -> str:

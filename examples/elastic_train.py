@@ -5,10 +5,16 @@ injected mid-run — the full LiveR lifecycle on host devices.
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
     PYTHONPATH=src python examples/elastic_train.py [--steps 200]
 
+``--trace SECONDS`` switches from the fixed schedule to the deadline-aware
+``ElasticScheduler`` replaying a seeded spot-market event stream
+(``sim.volatility.spot_trace``): resize warnings are coalesced/retargeted
+and fall back down the lattice (stream -> stop-copy -> checkpoint) as their
+windows demand.
+
 Watch for:
   * [event]/[switch] lines — training continues while the shadow world
     prepares; the pause at the switch is milliseconds;
-  * goodput printed at the end (≈99%+);
+  * goodput printed at the end (≈99%+ for the fixed schedule);
   * the loss curve crossing reconfigurations without a blip (paper Fig. 9).
 """
 
@@ -27,9 +33,54 @@ from repro.core.controller import LiveRController
 from repro.optim import AdamWConfig
 
 
+def run_trace(ctrl, trace_seconds: float) -> None:
+    """Replay a seeded spot trace through the deadline scheduler."""
+    from repro.elastic import ElasticScheduler, events_from_trace
+    from repro.sim.volatility import spot_trace
+
+    # ~10 events at native spacing 30x the live spacing, then compressed
+    # 30x so events land roughly every ``trace_seconds`` of wall clock.
+    # Warning windows are widened to ~90s live (2700 native): CPU-host
+    # prepare times are minutes-scale relative to the compressed clock, and
+    # the point of the demo is to watch the lattice pick LIVE rungs, not to
+    # drown every event in the checkpoint fallback.
+    trace = spot_trace(
+        trace_seconds * 30 * 10, trace_seconds * 30,
+        world_choices=(4, 8), seed=5, warning_s=2700.0,
+    )
+    events = events_from_trace(
+        trace, ctrl.cfg, ctrl.global_batch, ctrl.seq_len,
+        compress=30.0, max_pp=1,
+    )
+    print(f"replaying {len(events)} events, one every ~{trace_seconds:.0f}s")
+    sched = ElasticScheduler(
+        ctrl,
+        on_event=lambda o: print(
+            f"[event {o.index}] {o.kind} -> {o.target}: "
+            f"decision={o.decision or '-'} outcome={o.outcome or 'pending'}"
+        ),
+    )
+    rep = sched.run(events)
+    print(
+        f"\ntrace done: {rep.steps} steps, goodput {rep.goodput*100:.2f}%, "
+        f"pause {rep.pause_seconds:.2f}s"
+    )
+    for o in rep.outcomes:
+        print(
+            f"  ev{o.index} {o.kind:9s} {o.target:14s} "
+            f"{o.decision:10s} -> {o.outcome:10s} "
+            f"pause={o.pause_s*1e3:.0f}ms reused={o.reused_layers}"
+        )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument(
+        "--trace", type=float, default=0.0, metavar="SECONDS",
+        help="replay a spot trace with ~SECONDS between events through the "
+        "deadline scheduler instead of the fixed schedule",
+    )
     args = ap.parse_args()
 
     # ~100M params: qwen3 geometry at width 512
@@ -59,6 +110,12 @@ def main():
         ckpt_dir=ckpt_dir,
         ckpt_interval=40,
     )
+
+    if args.trace:
+        ctrl.train_steps(4)  # warm-up: compile amortized, estimator seeded
+        ctrl.checkpoint_now()  # fail-stop events need a durable restore point
+        run_trace(ctrl, args.trace)
+        return
 
     schedule = {
         args.steps // 4: ("resize", ParallelConfig(dp=2, tp=4)),  # scale out

@@ -8,9 +8,12 @@ Orchestrates the full reconfiguration lifecycle on live JAX state:
           → Cleanup (free old world asynchronously)
           → Stable
 
-plus the fail-stop fallback to durable checkpoints (invariant I4) and the
+plus the fail-stop fallback to durable checkpoints (invariant I4), the
 stop-and-restart / checkpoint-reshape (UCP) baselines used by the
-benchmarks.
+benchmarks, and the event-stream verbs the deadline scheduler drives
+(DESIGN.md §10): per-request transfer-mode override, ``retarget_resize``
+(supersede the in-flight reconfiguration, adopting its streamed state)
+and ``escalate_commit`` (deadline-pressure stop-copy).
 """
 
 from __future__ import annotations
@@ -54,6 +57,16 @@ class ReconfigRecord:
     total_pause_s: float = 0.0
     moved_bytes: int = 0
     mode: str = "live"  # live | live_overlap | restart | ucp_restart | fallback
+    # per-event disposition (DESIGN.md §10 fallback lattice):
+    #   committed  — the reconfiguration completed via its requested path
+    #   retargeted — superseded by a newer event before commit (its partial
+    #                streamed state may have been adopted by the successor)
+    #   fell_back  — completed, but via a downgraded path (stop-copy under
+    #                deadline pressure, or checkpoint restore)
+    #   aborted    — abandoned without completing
+    outcome: str = "committed"
+    # layers inherited from a superseded session at retarget
+    reused_layers: int = 0
     # plan-vs-live agreement (both sides from the one ReshardEngine path)
     plan_network_bytes: int = 0
     plan_local_bytes: int = 0
@@ -95,6 +108,7 @@ class LiveRController:
         overlap: str = "stop_copy",  # "stop_copy" | "stream"
         stream_k: int = 4,
         source_policy: str = "nearest",
+        sync_compile: bool = False,
     ):
         self.cfg = cfg
         self.opt_cfg = opt_cfg
@@ -107,8 +121,18 @@ class LiveRController:
         self.hint_version = hint_version
         assert overlap in ("stop_copy", "stream"), overlap
         self.overlap = overlap
+        # per-reconfiguration override (request_resize(..., overlap=...));
+        # resets to the constructor default when the reconfig retires
+        self._overlap_mode = overlap
         self.stream_k = stream_k
         self.source_policy = source_policy
+        # deterministic mode for parity tests / --check benchmark gates:
+        # compile the split-step grad executable inline instead of in a
+        # background thread, so the commit step index is reproducible
+        self.sync_compile = sync_compile
+        # streamed state captured from a superseded session at retarget,
+        # consumed by the next _start_overlap_session
+        self._reuse: Optional[tuple] = None
         self._session: Optional[OverlapSession] = None
         self._session_specs = None
         self._session_plan = None
@@ -152,8 +176,19 @@ class LiveRController:
     # ------------------------------------------------------------------
     # Prepare (background)
     # ------------------------------------------------------------------
-    def request_resize(self, target: ParallelConfig) -> int:
-        """Trigger: spawn Shadow World preparation. Non-blocking."""
+    def request_resize(
+        self, target: ParallelConfig, overlap: Optional[str] = None
+    ) -> int:
+        """Trigger: spawn Shadow World preparation. Non-blocking.
+
+        ``overlap`` overrides the constructor's transfer mode for THIS
+        reconfiguration only — the deadline scheduler uses it to downgrade
+        a single event to stop-copy without flipping the whole controller.
+        """
+        if overlap is not None:
+            assert overlap in ("stop_copy", "stream"), overlap
+            self._overlap_mode = overlap
+        mode = self._overlap_mode
         gen = self.machine.begin_prepare(description=target.describe())
 
         src_parallel = self.world.parallel
@@ -169,7 +204,7 @@ class LiveRController:
                 devices=self._device_subset(target),
                 compression=self.compression,
                 hint_version=self.hint_version,
-                split_step=self.overlap == "stream",
+                split_step=mode == "stream",
             )
             # transfer planning is metadata-only — do it here, in the
             # Prepare thread, so the commit pause never pays it (paper:
@@ -186,10 +221,132 @@ class LiveRController:
         self._builder = ShadowBuilder(build, gen.gen_id).start()
         return gen.gen_id
 
-    def cancel_resize(self) -> None:
-        """Target became stale before commit (paper §7): abandon shadow."""
+    def cancel_resize(self, outcome: Optional[str] = None) -> None:
+        """Target became stale before commit (paper §7): abandon shadow.
+
+        ``outcome`` (``retargeted`` | ``aborted``) retires the pending
+        reconfiguration with a ReconfigRecord so event-stream accounting
+        (DESIGN.md §10) sees every disposition; None keeps the classic
+        silent cancel."""
+        if outcome is not None and self._builder is not None:
+            rec = self._pending_rec or ReconfigRecord(
+                gen_id=self._builder.gen_id,
+                src=self.world.parallel.describe(),
+                dst=self.machine.shadow.description if self.machine.shadow else "?",
+                mode="live_overlap" if self._overlap_mode == "stream" else "live",
+            )
+            rec.outcome = outcome
+            self.records.append(rec)
+        if self._builder is not None:
+            self._builder.abandon()
         self.machine.cancel()
         self._reset_reconfig_state()
+
+    @property
+    def reconfig_pending(self) -> bool:
+        """A resize is in flight (Prepare/Ready/streaming, not committed)."""
+        return self._builder is not None
+
+    def wait_shadow_ready(self, timeout: Optional[float] = None) -> None:
+        """Block until the in-flight shadow world finishes building.
+
+        Deterministic-replay hook (parity tests, ``--check`` benchmark
+        gates): removes XLA-compile wall-clock from the commit-step
+        alignment. Never used on the autonomous path — there the training
+        loop simply keeps stepping until ``_poll_boundary`` sees readiness.
+        """
+        if self._builder is not None:
+            self._builder.result(timeout)
+
+    def retarget_resize(
+        self, target: ParallelConfig, overlap: Optional[str] = None
+    ) -> int:
+        """A newer elasticity event supersedes the in-flight reconfiguration
+        (paper §7 'Concurrent reconfiguration events').
+
+        The pending shadow is abandoned (its build thread cannot be killed,
+        only orphaned) and a fresh Prepare starts for ``target``. Any state
+        the superseded session already streamed is captured first — after a
+        full drain, so no in-flight scatter writes into a re-homed carry —
+        and the successor session adopts it (:meth:`OverlapSession.adopt`):
+        the stream continues where it left off instead of restarting from
+        scratch. The superseded event retires with a ``retargeted``
+        ReconfigRecord carrying whatever pre-copy work it had done.
+        """
+        if self._builder is None:
+            return self.request_resize(target, overlap=overlap)
+
+        reuse = None
+        rec = self._pending_rec
+        if self._session is not None:
+            # drain before capture: adopted carries must hold fully-landed
+            # rows, and the old session's staging must not alias sources
+            self._session.drain()
+            reuse = (
+                self._session_targets,
+                dict(self._session.executor.dst),
+                dict(self._session.streamed_at),
+            )
+            rep = self._session.report
+            if rec is not None:
+                rec.precopy_s = rep.precopy_seconds
+                rec.precopy_bytes = rep.precopy_bytes
+        if rec is None:
+            dst = self.machine.shadow.description if self.machine.shadow else "?"
+            rec = ReconfigRecord(
+                gen_id=self._builder.gen_id,
+                src=self.world.parallel.describe(),
+                dst=dst,
+                mode="live_overlap" if self._overlap_mode == "stream" else "live",
+            )
+        rec.outcome = "retargeted"
+        self.records.append(rec)
+
+        self._builder.abandon()
+        # the grads-only executable targets the OLD world, which a retarget
+        # does not change — keep the compile (or compiled fn) across resets
+        grad_builder = self._grad_builder
+        if self.machine.state in (GenState.PREPARE, GenState.READY):
+            self.machine.cancel()
+        self._reset_reconfig_state()
+        self._grad_builder = grad_builder
+        gen_id = self.request_resize(target, overlap=overlap)
+        self._reuse = reuse
+        return gen_id
+
+    def escalate_commit(self) -> Optional[ReconfigRecord]:
+        """Deadline pressure mid-stream: commit NOW via stop-copy.
+
+        The scheduler calls this when the warning window no longer covers
+        the remaining pre-copy rounds. If the shadow world is ready the
+        whole (remaining) transfer executes inside one stop-copy pause —
+        the middle rung of the fallback lattice. Returns the commit record,
+        or None when nothing was ready to commit (caller falls through to
+        the checkpoint rung)."""
+        if self._builder is None or not self._builder.ready:
+            return None
+        if self.machine.state == GenState.PREPARE:
+            self.machine.mark_ready(self._builder.gen_id, payload=self._builder.result())
+        if self.machine.state != GenState.READY:
+            return None
+        rep = None
+        reused = self._pending_rec.reused_layers if self._pending_rec else 0
+        if self._session is not None:
+            # retire the streaming session: its scatters must land before
+            # its carries are dropped; the stop-copy below re-moves
+            # everything from the current cut
+            self._session.drain()
+            rep = self._session.report
+        self._commit_switch()
+        rec = self.records[-1]
+        rec.outcome = "fell_back"
+        if rep is not None:
+            # keep the abandoned rounds' accounting: the escalation's cost
+            # IS the pre-copy work it wasted
+            rec.precopy_s = rep.precopy_seconds
+            rec.precopy_bytes = rep.precopy_bytes
+            rec.reused_layers = reused
+        return rec
 
     # ------------------------------------------------------------------
     # Training loop with boundary polling
@@ -239,7 +396,7 @@ class LiveRController:
             self.machine.mark_ready(self._builder.gen_id, payload=handle)
         if self.machine.state != GenState.READY:
             return
-        if self.overlap == "stop_copy":
+        if self._overlap_mode == "stop_copy":
             self._commit_switch()
             return
         # overlapped streaming: pre-copy K layers per boundary while the
@@ -345,6 +502,16 @@ class LiveRController:
             mode="live_overlap",
             plan_s=self._plan_seconds,
         )
+        # retarget reuse: continue from the superseded session's streamed
+        # state instead of restarting the stream from scratch
+        if self._reuse is not None:
+            old_targets, old_carries, old_streamed_at = self._reuse
+            self._reuse = None
+            self._pending_rec.reused_layers = self._session.adopt(
+                old_carries, old_targets, old_streamed_at
+            )
+        if self.sync_compile and self.world.grad_fn is None:
+            self.world.grad_fn = self._compile_grad_fn(self.world)
         # grads-only executable for the OLD world: compiled in a background
         # thread so the training loop never stalls on XLA (the commit is
         # simply not armed until it lands)
@@ -585,10 +752,24 @@ class LiveRController:
         self._commit_armed = False
         self._grad_builder = None
         self._plan_seconds = 0.0
+        self._reuse = None
+        self._overlap_mode = self.overlap
 
     # ------------------------------------------------------------------
     # Fail-stop fallback (invariant I4) and restart baselines
     # ------------------------------------------------------------------
+    def checkpoint_now(self) -> None:
+        """Durable snapshot of the current step, synchronously.
+
+        The scheduler's checkpoint rung: a warned event whose window cannot
+        fit any live path saves NOW (inside the window) so the follow-up
+        restore loses no progress."""
+        if self._ckpt is not None:
+            self._ckpt.save(
+                self.step, {"params": self.params, "opt": self.opt_state}
+            )
+            self._ckpt.wait()
+
     def fail_stop_recover(self, target: ParallelConfig) -> ReconfigRecord:
         """Unannounced failure: rebuild from the latest durable checkpoint."""
         assert self.ckpt_dir, "fallback requires a checkpoint directory"
@@ -596,7 +777,7 @@ class LiveRController:
             self._ckpt.wait()
         rec = ReconfigRecord(
             gen_id=-1, src=self.world.parallel.describe(),
-            dst=target.describe(), mode="fallback",
+            dst=target.describe(), mode="fallback", outcome="fell_back",
         )
         pause_start = time.perf_counter()
         # residual shadow work (paper §4.1 graceful degradation): a ready
@@ -610,6 +791,8 @@ class LiveRController:
             cand: WorldHandle = self._builder.result()
             if cand.parallel == target:
                 residual = cand
+        if self._builder is not None and residual is None:
+            self._builder.abandon()
         if self.machine.state in (GenState.PREPARE, GenState.READY):
             self.machine.cancel()
         self._reset_reconfig_state()

@@ -28,6 +28,23 @@ class ResizeEvent:
 
 @dataclass(frozen=True)
 class FailStopEvent:
+    """Unannounced failure: zero warning window. The scheduler routes these
+    to the durable-checkpoint fallback (controller ``fail_stop_recover``);
+    ``target`` is the post-failure topology when the (external) search
+    system has already chosen one, else the scheduler picks via
+    :func:`repro.core.topology_search.best_target` over the surviving
+    devices."""
+
     time_s: float
     lost_ranks: tuple[int, ...] = ()
     kind: str = "fail_stop"
+    target: Optional[ParallelConfig] = None
+
+
+ElasticityEvent = ResizeEvent | FailStopEvent
+
+
+def sort_trace(events: list) -> list:
+    """Events in firing order (stable for simultaneous arrivals, which the
+    scheduler then coalesces)."""
+    return sorted(events, key=lambda e: e.time_s)

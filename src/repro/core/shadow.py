@@ -62,6 +62,7 @@ class ShadowBuilder:
         self._done = threading.Event()
         self._thread = threading.Thread(target=self._run, daemon=True)
         self.started_at = time.perf_counter()
+        self.abandoned = False
 
     def start(self) -> "ShadowBuilder":
         self._thread.start()
@@ -81,6 +82,14 @@ class ShadowBuilder:
     @property
     def ready(self) -> bool:
         return self._done.is_set()
+
+    def abandon(self) -> None:
+        """Retarget/cancel semantics (paper §7 'Concurrent reconfiguration
+        events'): the daemon thread cannot be killed mid-``compile()``, so
+        the builder is marked abandoned and its world discarded on
+        completion. The controller may start a fresh builder immediately —
+        the stale thread only ever writes into this object."""
+        self.abandoned = True
 
     def result(self, timeout: Optional[float] = None) -> WorldHandle:
         if not self._done.wait(timeout):

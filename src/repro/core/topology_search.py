@@ -111,6 +111,7 @@ def search(
     current: ParallelConfig | None = None,
     transition_weight: float = 0.0,
     hbm_bytes: float = HBM_BYTES,
+    max_pp: int = 8,
 ) -> list[Candidate]:
     """Ranked feasible candidates (best first).
 
@@ -123,7 +124,7 @@ def search(
 
     cands = []
     specs = build_tensor_specs(cfg) if (current and transition_weight) else None
-    for par in feasible_configs(cfg, world, global_batch):
+    for par in feasible_configs(cfg, world, global_batch, max_pp=max_pp):
         t, mem = estimate_step_time(cfg, par, global_batch, seq_len)
         if mem > hbm_bytes:
             continue
@@ -144,8 +145,12 @@ def best_target(
     seq_len: int,
     current: ParallelConfig | None = None,
     transition_weight: float = 0.0,
+    max_pp: int = 8,
 ) -> ParallelConfig:
-    cands = search(cfg, world, global_batch, seq_len, current, transition_weight)
+    cands = search(
+        cfg, world, global_batch, seq_len, current, transition_weight,
+        max_pp=max_pp,
+    )
     if not cands:
         raise ValueError(
             f"no feasible topology for {cfg.name} at world={world} "

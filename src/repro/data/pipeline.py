@@ -1,4 +1,5 @@
-"""Deterministic, elastically-resharding synthetic LM data pipeline.
+"""Deterministic, elastically-resharding synthetic LM data pipeline
+(supports the paper's iteration-boundary consistent cut, invariant I3).
 
 Design requirement from LiveR: when the DP degree changes mid-run, the
 *global* token stream must be unaffected — only its partitioning across data

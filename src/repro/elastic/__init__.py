@@ -1,0 +1,28 @@
+"""Trace-driven elasticity scheduling (paper §2.3 event streams, §4.1).
+
+The controller executes ONE reconfiguration; this package turns streams of
+elasticity events — spot-market warnings, preemptions, fail-stops — into
+deadline-aware decisions over the live :class:`LiveRController`: overlapped
+streaming when the warning window allows, stop-copy when it is tight,
+durable checkpoint when nothing else fits (DESIGN.md §10).
+"""
+
+from repro.elastic.scheduler import (
+    DeadlineEstimator,
+    ElasticScheduler,
+    EventOutcome,
+    ReconfigEstimate,
+    ScheduleReport,
+    choose_mode,
+)
+from repro.elastic.trace import events_from_trace
+
+__all__ = [
+    "DeadlineEstimator",
+    "ElasticScheduler",
+    "EventOutcome",
+    "ReconfigEstimate",
+    "ScheduleReport",
+    "choose_mode",
+    "events_from_trace",
+]

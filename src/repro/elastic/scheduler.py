@@ -1,0 +1,536 @@
+"""Deadline-aware elasticity scheduler over the live controller (DESIGN.md
+§10; paper §2.3 event streams, §4.1 warning windows).
+
+The paper's volatility numbers assume every event lands inside its warning
+window; this module is the event loop that makes that true on the *real*
+``LiveRController`` rather than the analytic simulator. For each event it
+
+  1. estimates trigger-to-safe time for each rung of the fallback lattice
+     (overlapped streaming -> stop-copy -> durable checkpoint) from the
+     intersection plan's byte counts and the recent ``ReconfigRecord``
+     history,
+  2. picks the highest rung whose estimate (x safety margin) fits the
+     warning window,
+  3. coalesces duplicate events and retargets the in-flight reconfiguration
+     when a newer event supersedes it (``retarget_resize`` adopts the
+     already-streamed intersection state so the stream continues instead of
+     restarting), and
+  4. escalates mid-stream to stop-copy (``escalate_commit``) when the
+     remaining window no longer covers the pre-copy schedule.
+
+Trace times run on a *virtual clock*: ``clock += wall_dt * time_scale``, so
+a compressed trace replays in CI while deadline arithmetic stays in trace
+units. Measured goodput comes from the controller's ``GoodputLedger`` —
+real pauses, not modeled ones — which ``benchmarks/bench_goodput.py``
+reports next to the analytic ``sim.liver_sim.volatility_run`` prediction.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+from repro.core.events import FailStopEvent, ResizeEvent, sort_trace
+
+
+# ---------------------------------------------------------------------------
+# Estimation + the fallback-lattice decision (pure; unit-testable)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ReconfigEstimate:
+    """Trigger-to-safe time estimates for one candidate reconfiguration.
+
+    All in real seconds; the scheduler converts with its ``time_scale``
+    before comparing to a (virtual-time) warning window.
+    """
+
+    prepare_s: float  # shadow build: mesh + lower + compile
+    precopy_s: float  # streaming rounds riding iteration boundaries
+    stream_pause_s: float  # commit pause of the overlapped path
+    stop_copy_pause_s: float  # whole transfer inside one pause
+    plan_bytes: int
+    rounds: int
+    step_s: float
+
+    @property
+    def stream_total_s(self) -> float:
+        """Trigger -> committed via overlapped streaming."""
+        return self.prepare_s + self.precopy_s + self.stream_pause_s
+
+    @property
+    def stop_copy_total_s(self) -> float:
+        """Trigger -> committed via stop-copy (no boundary rounds)."""
+        return self.prepare_s + self.stop_copy_pause_s
+
+
+def choose_mode(
+    est: ReconfigEstimate,
+    window_s: float,
+    safety: float = 1.25,
+    time_scale: float = 1.0,
+) -> str:
+    """The fallback lattice: highest rung whose estimate fits the window.
+
+    overlap ("stream") completes slowest but pauses least; stop-copy
+    completes right after Prepare at the price of one long pause; the
+    checkpoint rung always fits (a durable save needs no shadow world and
+    survives the resources vanishing at the deadline) and is therefore the
+    unconditional last resort.
+    """
+    if est.stream_total_s * safety * time_scale <= window_s:
+        return "stream"
+    if est.stop_copy_total_s * safety * time_scale <= window_s:
+        return "stop_copy"
+    return "checkpoint"
+
+
+def _median(xs: list[float]) -> Optional[float]:
+    xs = sorted(x for x in xs if x > 0)
+    return xs[len(xs) // 2] if xs else None
+
+
+class DeadlineEstimator:
+    """prepare+stream estimates from plan metadata and reconfig history.
+
+    Bytes come from the same ``plan_state_transfer`` machinery that fills
+    the shadow world's ``plan_bundle`` (a ready bundle for the right target
+    is used as-is); seconds come from the recent ``ReconfigRecord``s —
+    median prepare time and effective transfer bandwidth — falling back to
+    the constructor defaults until history exists.
+    """
+
+    def __init__(
+        self,
+        controller,
+        default_prepare_s: float = 20.0,
+        default_bw_bytes_s: float = 1e9,
+        default_step_s: float = 0.25,
+        history: int = 8,
+    ):
+        self.ctrl = controller
+        self.default_prepare_s = default_prepare_s
+        self.default_bw = default_bw_bytes_s
+        self.default_step_s = default_step_s
+        self.history = history
+
+    # -- history --------------------------------------------------------
+    def _recent(self) -> list:
+        recs = [
+            r
+            for r in self.ctrl.records
+            if r.mode in ("live", "live_overlap") and r.outcome == "committed"
+        ]
+        return recs[-self.history :]
+
+    def prepare_estimate(self) -> float:
+        m = _median([r.prepare_s for r in self._recent()])
+        if m is not None:
+            return m
+        # cold start: the gen-0 world's own build timings are the best proxy
+        t = self.ctrl.world.timings
+        seed = sum(t.get(k, 0.0) for k in ("mesh_s", "lower_s", "compile_s"))
+        return seed or self.default_prepare_s
+
+    def bandwidth_estimate(self) -> float:
+        bws = []
+        for r in self._recent():
+            moved = r.moved_bytes
+            secs = r.transfer_s + r.resync_s + r.precopy_s
+            if moved > 0 and secs > 0:
+                bws.append(moved / secs)
+        return _median(bws) or self.default_bw
+
+    def step_estimate(self) -> float:
+        return _median(list(self.ctrl.iteration_times)[-16:]) or self.default_step_s
+
+    # -- the estimate ---------------------------------------------------
+    def _plan_for(self, target) -> tuple[int, int]:
+        """(plan bytes, plan layers) for current-world -> target."""
+        b = getattr(self.ctrl, "_builder", None)
+        if b is not None and b.ready and not b.abandoned:
+            handle = b.result()
+            bundle = handle.plan_bundle
+            if (
+                handle.parallel == target
+                and bundle is not None
+                and bundle[0] == self.ctrl.world.parallel
+            ):
+                plan = bundle[2]
+                return plan.network_bytes + plan.local_bytes, len(plan.layers())
+        from repro.core.reshard import plan_state_transfer
+
+        _, plan = plan_state_transfer(
+            self.ctrl.cfg, self.ctrl.world.parallel, target,
+            source_policy=self.ctrl.source_policy,
+        )
+        return plan.network_bytes + plan.local_bytes, len(plan.layers())
+
+    def estimate(self, target) -> ReconfigEstimate:
+        plan_bytes, layers = self._plan_for(target)
+        bw = self.bandwidth_estimate()
+        step_s = self.step_estimate()
+        rounds = math.ceil(layers / max(1, self.ctrl.stream_k))
+        transfer_s = plan_bytes / bw
+        return ReconfigEstimate(
+            prepare_s=self.prepare_estimate(),
+            # one pre-copy round per iteration boundary, each hiding its
+            # bytes under a training step (dispatch rides the boundary)
+            precopy_s=rounds * step_s,
+            # dense-optimizer worst case: every layer is dirty at commit,
+            # so the commit pause re-moves the plan (overlap.py's honest
+            # limit) — minus nothing we can promise in advance
+            stream_pause_s=transfer_s,
+            stop_copy_pause_s=transfer_s,
+            plan_bytes=plan_bytes,
+            rounds=rounds,
+            step_s=step_s,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Per-event bookkeeping
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class EventOutcome:
+    index: int
+    kind: str  # resize | fail_stop
+    time_s: float
+    window_s: float
+    target: str
+    decision: str = ""  # stream | stop_copy | checkpoint | coalesce | cancel | noop
+    outcome: str = ""  # committed | retargeted | fell_back | aborted | coalesced
+    gen_id: int = -1
+    mode: str = ""  # ReconfigRecord.mode of the commit, when one happened
+    est_stream_total_s: float = 0.0
+    est_stop_copy_total_s: float = 0.0
+    commit_clock_s: float = -1.0
+    met_deadline: Optional[bool] = None
+    reused_layers: int = 0
+    pause_s: float = 0.0
+
+    def to_dict(self) -> dict:
+        return dict(self.__dict__)
+
+
+@dataclass
+class _Pending:
+    outcome: EventOutcome
+    target: Any
+    gen_id: int
+    deadline: float
+    mode: str
+    est: ReconfigEstimate
+
+
+@dataclass
+class ScheduleReport:
+    outcomes: list[EventOutcome]
+    steps: int
+    duration_s: float  # virtual trace time covered
+    wall_s: float
+    goodput: float
+    pause_seconds: float
+
+    def count(self, outcome: str) -> int:
+        return sum(1 for o in self.outcomes if o.outcome == outcome)
+
+    @property
+    def aborted(self) -> int:
+        return self.count("aborted")
+
+    def to_dict(self) -> dict:
+        return {
+            "events": [o.to_dict() for o in self.outcomes],
+            "steps": self.steps,
+            "duration_s": self.duration_s,
+            "wall_s": self.wall_s,
+            "goodput": self.goodput,
+            "pause_seconds": self.pause_seconds,
+            "outcome_counts": {
+                k: self.count(k)
+                for k in (
+                    "committed", "retargeted", "fell_back", "aborted", "coalesced",
+                )
+            },
+        }
+
+
+# ---------------------------------------------------------------------------
+# The event loop
+# ---------------------------------------------------------------------------
+
+
+class ElasticScheduler:
+    """Replays an elasticity-event trace against a live controller.
+
+    ``time_scale`` converts wall seconds into virtual trace seconds
+    (``clock += dt * time_scale``); estimates are scaled the same way before
+    deadline comparisons. ``sync_prepare`` blocks on shadow builds so replay
+    is step-deterministic (parity tests / ``--check`` gates); the default
+    keeps Prepare fully overlapped with training, as in the paper.
+    """
+
+    def __init__(
+        self,
+        controller,
+        time_scale: float = 1.0,
+        safety: float = 1.25,
+        estimator: Optional[DeadlineEstimator] = None,
+        sync_prepare: bool = False,
+        mode_override: Optional[str] = None,
+        tail_steps: int = 2,
+        max_steps: int = 5000,
+        on_event: Optional[Callable[[EventOutcome], None]] = None,
+    ):
+        self.ctrl = controller
+        self.time_scale = time_scale
+        self.safety = safety
+        self.estimator = estimator or DeadlineEstimator(controller)
+        self.sync_prepare = sync_prepare
+        self.mode_override = mode_override
+        self.tail_steps = tail_steps
+        self.max_steps = max_steps
+        self.on_event = on_event
+        self.clock = 0.0
+        self.total_steps = 0
+        self.outcomes: list[EventOutcome] = []
+        self._pending: Optional[_Pending] = None
+        self._seen = len(controller.records)
+
+    # -- clock ----------------------------------------------------------
+    def _clocked(self, fn):
+        t0 = time.perf_counter()
+        out = fn()
+        self.clock += (time.perf_counter() - t0) * self.time_scale
+        return out
+
+    def _step(self) -> None:
+        if self.total_steps >= self.max_steps:
+            raise RuntimeError(
+                f"scheduler exceeded max_steps={self.max_steps} "
+                "(runaway trace or a reconfiguration that never commits)"
+            )
+        self._clocked(lambda: self.ctrl.train_steps(1))
+        self.total_steps += 1
+        self._absorb()
+        self._enforce_deadline()
+
+    def _advance_to(self, t: float) -> None:
+        while self.clock < t:
+            self._step()
+        self.clock = max(self.clock, t)
+
+    # -- record bookkeeping ---------------------------------------------
+    def _absorb(self) -> None:
+        """Match freshly-appended ReconfigRecords to the pending event."""
+        recs = self.ctrl.records
+        while self._seen < len(recs):
+            rec = recs[self._seen]
+            self._seen += 1
+            p = self._pending
+            if (
+                p is not None
+                and rec.gen_id == p.gen_id
+                and rec.outcome != "retargeted"
+            ):
+                o = p.outcome
+                o.outcome = rec.outcome
+                o.mode = rec.mode
+                o.commit_clock_s = self.clock
+                o.met_deadline = self.clock <= p.deadline
+                o.reused_layers = rec.reused_layers
+                o.pause_s = rec.total_pause_s
+                self._pending = None
+
+    def _enforce_deadline(self) -> None:
+        """Escalate down the lattice when the window stops covering the
+        remaining schedule (graceful degradation, paper §4.1)."""
+        p = self._pending
+        if p is None:
+            return
+        margin = (
+            self.safety
+            * (p.est.stop_copy_pause_s + p.est.step_s)
+            * self.time_scale
+        )
+        if p.mode == "stream" and self.clock >= p.deadline - margin:
+            if self._clocked(self.ctrl.escalate_commit) is not None:
+                self._absorb()
+                return
+        if self.clock > p.deadline:
+            # window missed with the shadow still building: last rung
+            if self.ctrl.ckpt_dir:
+                self.ctrl.cancel_resize(outcome="aborted")
+                self._restore(p.target, p.outcome, save_first=True)
+                p.outcome.met_deadline = False
+                self._seen = len(self.ctrl.records)
+                self._pending = None
+            # else: keep trying — the reconfig will land late (met_deadline
+            # False) but the run survives; aborting gains nothing
+
+    # -- fallback rungs --------------------------------------------------
+    def _restore(self, target, o: EventOutcome, save_first: bool) -> None:
+        """Checkpoint rung: durable save (when warned) + stop-and-restart."""
+        if not self.ctrl.ckpt_dir:
+            o.outcome = "aborted"
+            return
+        if save_first:
+            self._clocked(self.ctrl.checkpoint_now)
+        try:
+            rec = self._clocked(lambda: self.ctrl.fail_stop_recover(target))
+        except AssertionError:
+            # unannounced failure before the first durable save landed:
+            # nothing to restore from — the honest outcome is an abort
+            o.outcome = "aborted"
+            return
+        o.outcome = "fell_back"
+        o.mode = rec.mode
+        o.commit_clock_s = self.clock
+        o.pause_s = rec.total_pause_s
+        self._seen = len(self.ctrl.records)
+
+    # -- event handling ---------------------------------------------------
+    def _handle_resize(self, ev: ResizeEvent, o: EventOutcome) -> None:
+        target = ev.target
+        p = self._pending
+        window = max(0.0, ev.deadline_s - self.clock)
+        o.window_s = window
+
+        if p is not None and target == p.target:
+            # duplicate warning for the in-flight target: coalesce, keeping
+            # the tighter deadline
+            o.decision, o.outcome = "coalesce", "coalesced"
+            p.deadline = min(p.deadline, ev.deadline_s)
+            return
+        if p is None and target == self.ctrl.world.parallel:
+            o.decision, o.outcome = "noop", "coalesced"  # already there
+            return
+        if p is not None and target == self.ctrl.world.parallel:
+            # the newer event returns to the CURRENT config: cancel the
+            # in-flight reconfiguration outright (paper §7 stale target)
+            p.outcome.outcome = "retargeted"
+            self.ctrl.cancel_resize(outcome="retargeted")
+            self._seen = len(self.ctrl.records)
+            self._pending = None
+            o.decision, o.outcome = "cancel", "committed"
+            return
+
+        est = self.estimator.estimate(target)
+        o.est_stream_total_s = est.stream_total_s
+        o.est_stop_copy_total_s = est.stop_copy_total_s
+        mode = self.mode_override or choose_mode(
+            est, window, self.safety, self.time_scale
+        )
+        o.decision = mode
+
+        if p is not None:
+            # a newer event supersedes the in-flight reconfiguration
+            p.outcome.outcome = "retargeted"
+            if mode == "checkpoint":
+                self.ctrl.cancel_resize(outcome="retargeted")
+                self._pending = None
+                self._restore(target, o, save_first=True)
+                return
+            gen = self._clocked(
+                lambda: self.ctrl.retarget_resize(target, overlap=mode)
+            )
+        elif mode == "checkpoint":
+            self._restore(target, o, save_first=True)
+            return
+        else:
+            gen = self._clocked(
+                lambda: self.ctrl.request_resize(target, overlap=mode)
+            )
+        if self.sync_prepare:
+            self.ctrl.wait_shadow_ready()
+        o.gen_id = gen
+        self._seen = len(self.ctrl.records)
+        self._pending = _Pending(
+            outcome=o, target=target, gen_id=gen,
+            deadline=ev.deadline_s, mode=mode, est=est,
+        )
+
+    def _handle_failstop(self, ev: FailStopEvent, o: EventOutcome) -> None:
+        if self._pending is not None:
+            # supersede the in-flight reconfiguration on BOTH sides: the
+            # controller must drop its shadow too, or the orphaned build
+            # commits later to a target the event stream already abandoned
+            self._pending.outcome.outcome = "retargeted"
+            self.ctrl.cancel_resize(outcome="retargeted")
+            self._seen = len(self.ctrl.records)
+            self._pending = None
+        target = ev.target
+        if target is None:
+            target = self._survivor_target(ev)
+            if target is None:
+                o.outcome = "aborted"  # no feasible surviving topology
+                return
+        o.target = target.describe()
+        o.decision = "checkpoint"
+        # unannounced: no pre-deadline save — recovery rolls back to the
+        # last durable checkpoint (invariant I4)
+        self._restore(target, o, save_first=False)
+
+    def _survivor_target(self, ev: FailStopEvent):
+        """Largest feasible topology over the surviving devices: the naive
+        ``world - lost`` count is usually infeasible (divisibility), so walk
+        down until the search finds one."""
+        from repro.core.topology_search import best_target
+
+        survivors = max(
+            1, self.ctrl.world.parallel.world_size - max(1, len(ev.lost_ranks))
+        )
+        for world in range(survivors, 0, -1):
+            try:
+                return best_target(
+                    self.ctrl.cfg, world, self.ctrl.global_batch,
+                    self.ctrl.seq_len, max_pp=1,
+                )
+            except ValueError:
+                continue
+        return None
+
+    def _handle(self, ev) -> None:
+        o = EventOutcome(
+            index=len(self.outcomes),
+            kind=getattr(ev, "kind", "resize"),
+            time_s=ev.time_s,
+            window_s=getattr(ev, "warning_s", 0.0),
+            target=ev.target.describe() if ev.target is not None else "?",
+        )
+        self.outcomes.append(o)
+        if isinstance(ev, FailStopEvent):
+            self._handle_failstop(ev, o)
+        else:
+            self._handle_resize(ev, o)
+        self._absorb()
+        if self.on_event:
+            self.on_event(o)
+
+    # -- entry point ------------------------------------------------------
+    def run(self, events: list) -> ScheduleReport:
+        wall0 = time.perf_counter()
+        for ev in sort_trace(events):
+            self._advance_to(ev.time_s)
+            self._handle(ev)
+        while self._pending is not None:
+            self._step()
+        for _ in range(self.tail_steps):
+            self._clocked(lambda: self.ctrl.train_steps(1))
+            self.total_steps += 1
+        self._absorb()
+        ledger = self.ctrl.ledger
+        return ScheduleReport(
+            outcomes=self.outcomes,
+            steps=self.total_steps,
+            duration_s=self.clock,
+            wall_s=time.perf_counter() - wall0,
+            goodput=ledger.goodput,
+            pause_seconds=ledger.pause_seconds,
+        )

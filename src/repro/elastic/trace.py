@@ -1,0 +1,61 @@
+"""Trace -> typed elasticity events (paper §6.4/§6.5 volatility regimes).
+
+``repro.sim.volatility`` emits abstract ``(t, world[, kind, warning])``
+rows; the live scheduler needs :class:`ResizeEvent`/:class:`FailStopEvent`
+with concrete ``ParallelConfig`` targets. The topology choice is delegated
+to ``core/topology_search`` — exactly the external-search integration the
+paper defers (§2.3(D)).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.events import FailStopEvent, ResizeEvent
+
+
+def events_from_trace(
+    trace: Iterable[Sequence],
+    cfg: ModelConfig,
+    global_batch: int,
+    seq_len: int,
+    compress: float = 1.0,
+    default_warning_s: float = 120.0,
+    max_pp: int = 8,
+) -> list:
+    """Convert trace rows into scheduler events.
+
+    Rows are ``(t, world)`` (the sim's classic shape), ``(t, world, kind)``
+    or ``(t, world, kind, warning_s)`` with ``kind in {"resize",
+    "fail_stop"}``. ``compress`` divides every time and warning window so a
+    multi-hour trace replays against the live controller in seconds (a
+    24 h / 47-event trace at ``compress=3600`` fires an event roughly every
+    half-minute of wall clock).
+    """
+    from repro.core.topology_search import best_target
+
+    assert compress > 0, compress
+    events = []
+    target_cache: dict[int, object] = {}
+    for row in trace:
+        t, world = float(row[0]), int(row[1])
+        kind = row[2] if len(row) > 2 else "resize"
+        warning = float(row[3]) if len(row) > 3 else default_warning_s
+        if world not in target_cache:
+            target_cache[world] = best_target(
+                cfg, world, global_batch, seq_len, max_pp=max_pp
+            )
+        target = target_cache[world]
+        if kind == "fail_stop":
+            events.append(FailStopEvent(time_s=t / compress, target=target))
+        else:
+            events.append(
+                ResizeEvent(
+                    time_s=t / compress,
+                    target=target,
+                    warning_s=warning / compress,
+                    kind=kind,
+                )
+            )
+    return events

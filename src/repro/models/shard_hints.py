@@ -1,4 +1,4 @@
-"""Trace-time activation-sharding hints (§Perf hillclimbing mechanism).
+"""Trace-time activation-sharding hints (beyond-paper, DESIGN.md §8).
 
 GSPMD propagates shardings from weights alone, which leaves several
 pathologies in the baseline HLO (full logits all-gathers, replicated MoE

@@ -43,6 +43,21 @@ from repro.reshard.engine import ReshardEngine, StreamStats
 from repro.reshard.executors import LiveExecutor
 
 
+def _layout_agrees(sh_old, sh_new, shape: tuple) -> bool:
+    """True when two shardings lay the same logical shape out identically
+    on the same devices — carries transfer between them zero-copy. Sharding
+    equality is sufficient; otherwise compare the device→index maps (two
+    NamedShardings over differently-factored meshes can still place every
+    byte identically, e.g. fully-replicated tensors on the same device
+    set)."""
+    if sh_old is sh_new or sh_old == sh_new:
+        return True
+    try:
+        return sh_old.devices_indices_map(shape) == sh_new.devices_indices_map(shape)
+    except Exception:
+        return False
+
+
 @dataclass
 class OverlapReport:
     precopy_rounds: int = 0
@@ -51,6 +66,8 @@ class OverlapReport:
     resync_layers: int = 0
     resync_bytes: int = 0
     resync_seconds: float = 0.0
+    # layers inherited from a superseded session at retarget (adopt())
+    reused_layers: int = 0
     # dispatch-vs-drain attribution across all rounds (pre-copy + re-sync):
     # dispatch = host time issuing device programs, drain = blocking waits
     # (staging syncs, double-buffer backpressure, final commit drain)
@@ -96,6 +113,64 @@ class OverlapSession:
     @property
     def done_precopy(self) -> bool:
         return not self.pending
+
+    # ------------------------------------------------------------------
+    def adopt(
+        self,
+        carries: dict[str, Any],
+        old_targets: dict[str, Any],
+        streamed_at: dict[int, int],
+    ) -> int:
+        """Retarget reuse (DESIGN.md §10): seed this session from a
+        superseded session's already-streamed intersection state instead of
+        restarting the stream from scratch.
+
+        A destination carry is a *global* array — its streamed rows hold the
+        step-``s`` values of the logical tensor regardless of which plan
+        decomposition wrote them — so carries transfer between targets:
+        zero-copy where the old and new target shardings agree
+        (:func:`_layout_agrees`), via a single device-side relayout
+        (``device_put``) where they do not; both are cheaper than re-pulling
+        the bytes from the source through the engine. A layer counts as
+        already streamed iff the old session streamed it, and keeps its
+        original ``streamed_at`` step so the commit-time dirty re-sync still
+        refreshes anything the optimizer has since touched (reuse shortens
+        the pre-copy schedule — time-to-commit under a deadline — never the
+        re-sync correctness). Returns the number of reused layers.
+
+        Must be called before the first ``stream_next``; the caller is
+        responsible for having drained the old session first (its scatters
+        must have landed before its carries are re-homed)."""
+        import jax
+
+        assert not self.streamed_at, "adopt() must precede streaming"
+        adopted: set[str] = set()
+        for name, sh_new in self.executor.target_shardings.items():
+            leaf = carries.get(name)
+            sh_old = old_targets.get(name)
+            if leaf is None or sh_old is None:
+                continue
+            spec = self.spec_map.get(name)
+            if spec is None or tuple(leaf.shape) != tuple(spec.shape):
+                continue
+            if _layout_agrees(sh_old, sh_new, tuple(leaf.shape)):
+                self.executor.dst[name] = leaf
+            else:
+                self.executor.dst[name] = jax.device_put(leaf, sh_new)
+            adopted.add(name)
+        # a layer is reused iff the old session streamed it AND every
+        # tensor its tasks touch has an adopted carry
+        reused = [
+            l
+            for l in self.pending
+            if l in streamed_at
+            and {t.tensor for t in self.plan.by_layer(l)} <= adopted
+        ]
+        for l in reused:
+            self.pending.remove(l)
+            self.streamed_at[l] = streamed_at[l]
+        self.report.reused_layers = len(reused)
+        return len(reused)
 
     def dirty_layers(self, step: int) -> list[int]:
         """Layers whose stream predates the optimizer's latest update."""

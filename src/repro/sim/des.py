@@ -1,4 +1,5 @@
-"""Minimal deterministic discrete-event simulation engine.
+"""Minimal deterministic discrete-event simulation engine — the substrate
+under the paper's §5 simulator (``sim/liver_sim.py``, Figs. 10–11).
 
 (SimPy — used by the paper — is not installed here; this heapq-based engine
 provides the same primitives we need: scheduled callbacks, processes as

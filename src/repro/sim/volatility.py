@@ -35,6 +35,43 @@ def make_trace(
     return out
 
 
+def spot_trace(
+    duration_s: float,
+    mean_interval_s: float,
+    world_choices: tuple[int, ...] = (16, 24, 32),
+    seed: int = 0,
+    warning_s: float = 120.0,
+    failstop_every: int = 5,
+) -> list[tuple[float, int, str, float]]:
+    """Spot-market style event stream for the live scheduler (paper §4.1).
+
+    Like :func:`make_trace` but each row carries an event kind and warning
+    window: resizes arrive with the spot notice (AWS's 2-minute default);
+    every ``failstop_every``-th event is an unannounced fail-stop dropping
+    to the smallest pool (warning 0 — invariant I4 territory). Rows are
+    ``(t, world, kind, warning_s)`` — ``elastic.events_from_trace`` turns
+    them into typed events with concrete topologies.
+    """
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    out: list[tuple[float, int, str, float]] = []
+    world = world_choices[-1]
+    n = 0
+    while True:
+        t += rng.uniform(0.5, 1.5) * mean_interval_s
+        if t >= duration_s:
+            break
+        n += 1
+        if failstop_every and n % failstop_every == 0:
+            world = min(world_choices)
+            out.append((t, world, "fail_stop", 0.0))
+        else:
+            choices = [w for w in world_choices if w != world]
+            world = int(rng.choice(choices))
+            out.append((t, world, "resize", warning_s))
+    return out
+
+
 def paper_24h_trace(seed: int = 1) -> list[tuple[float, int]]:
     """~47 events over 24 h (paper Fig. 8: GPT-14B, 32 GPUs, 47 reconfigs)."""
     duration = 24 * 3600.0

@@ -1,9 +1,9 @@
-"""Pytree helpers shared across the framework.
+"""Pytree helpers shared across the framework (DESIGN.md §2).
 
 We use plain nested dicts of jnp arrays as parameter containers (no flax).
 Leaf naming follows ``a/b/c`` path strings derived from jax.tree_util key
-paths; these names are the identities used by the Abstract Resource View,
-the checkpoint manifests and the sharding rules.
+paths; these names are the identities used by the Abstract Resource View
+(paper §4.6.1), the checkpoint manifests and the sharding rules.
 """
 
 from __future__ import annotations

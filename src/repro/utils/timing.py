@@ -1,4 +1,6 @@
-"""Wall-clock timing utilities used by benchmarks and the controller."""
+"""Wall-clock timing utilities used by benchmarks and the controller —
+the measurement substrate behind the paper's §6 latency breakdowns
+(``ReconfigRecord`` phase timings, Figs. 6a–6d)."""
 
 from __future__ import annotations
 
