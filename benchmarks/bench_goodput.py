@@ -8,13 +8,19 @@ live JAX state — and reports the measured goodput (from the controller's
 ``sim.liver_sim.volatility_run`` prediction for the same event sequence,
 the number the paper's Figs. 7–8 are built from.
 
+The controller runs with a speculative warm :class:`WorldPool` and the
+scheduler's prefetch policy (DESIGN.md §12): retired/abandoned/prefetched
+worlds serve later resizes warm, skipping lower+compile. The payload's
+``measured.warm_cold`` section breaks prepare time down by warm vs cold.
+
 ``--smoke`` replays a fixed 6-event trace exercising every rung of the
 fallback lattice (stream commit, mid-prepare retarget, coalesce,
 too-short-window checkpoint fallback, unannounced fail-stop, final stream
 commit); ``--check`` exits nonzero unless the scheduler replayed >= 5
-events with zero ``aborted`` outcomes. The full mode replays a seeded
-``spot_trace`` with live deadline decisions. Results land in
-``results/BENCH_goodput.json``.
+events with zero ``aborted`` outcomes, at least one resize was served
+warm from the pool, and warm prepare beat cold by >= 5x. The full mode
+replays a seeded ``spot_trace`` with live deadline decisions. Results
+land in ``results/BENCH_goodput.json``.
 """
 
 from __future__ import annotations
@@ -25,12 +31,15 @@ import sys
 from benchmarks.common import emit, run_with_devices, write_results
 
 _SNIPPET = """
-import json, tempfile
+import json, statistics, tempfile
 from repro.configs import get_config
 from repro.configs.base import ParallelConfig
 from repro.core.controller import LiveRController
 from repro.core.events import FailStopEvent, ResizeEvent
-from repro.elastic import DeadlineEstimator, ElasticScheduler, events_from_trace
+from repro.core.world_pool import WorldPool
+from repro.elastic import (
+    DeadlineEstimator, ElasticScheduler, PrefetchPolicy, events_from_trace,
+)
 from repro.optim import AdamWConfig
 from repro.sim.cluster import PAPER_TESTBED
 from repro.sim.liver_sim import SystemKind, volatility_run
@@ -42,6 +51,7 @@ ctrl = LiveRController(
     cfg, ParallelConfig(dp=2, tp=2), AdamWConfig(learning_rate=1e-3),
     seq_len=32, global_batch=8, ckpt_dir=tempfile.mkdtemp(prefix="goodput_"),
     ckpt_interval=2, overlap="stream", stream_k=2, sync_compile=SMOKE,
+    world_pool=WorldPool(capacity=3),
 )
 # warm-up: compile amortized, a durable checkpoint on disk (the fail-stop
 # rung needs one), and iteration_times seeded for the deadline estimator
@@ -74,6 +84,9 @@ ANALYTIC_SPACING = 600.0 if SMOKE else 20.0  # undo replay compression
 sched = ElasticScheduler(
     ctrl, time_scale=time_scale, sync_prepare=sync_prepare,
     estimator=DeadlineEstimator(ctrl), max_steps=20_000,
+    # max_pp matches the trace's own target bound (events_from_trace
+    # max_pp=1 below) so prefetched pool keys can actually hit
+    prefetch=PrefetchPolicy(ctrl, k=1, max_pp=1),
 )
 report = sched.run(events)
 
@@ -93,6 +106,15 @@ analytic = volatility_run(
 )
 
 doc = report.to_dict()
+# warm-vs-cold prepare breakdown: every record whose Prepare completed,
+# keyed on whether the warm pool (or residual shadow work) served it.
+# Speculative joins measure only the residual wait of an in-flight
+# prefetch — neither warm nor cold — and are reported separately.
+warm = [r.prepare_s for r in ctrl.records if r.warm_hit and r.prepare_s > 0]
+cold = [r.prepare_s for r in ctrl.records
+        if not r.warm_hit and r.prepare_source == "cold" and r.prepare_s > 0]
+joins = [r.prepare_s for r in ctrl.records
+         if r.prepare_source == "speculative_join" and r.prepare_s > 0]
 doc["measured"] = {
     "goodput": report.goodput,
     "pause_seconds": report.pause_seconds,
@@ -100,9 +122,22 @@ doc["measured"] = {
     "steps": report.steps,
     "reconfig_records": [
         {"src": r.src, "dst": r.dst, "mode": r.mode, "outcome": r.outcome,
-         "pause_s": r.total_pause_s, "reused_layers": r.reused_layers}
+         "pause_s": r.total_pause_s, "reused_layers": r.reused_layers,
+         "warm_hit": r.warm_hit, "prepare_s": r.prepare_s,
+         "prepare_source": r.prepare_source}
         for r in ctrl.records
     ],
+    "warm_cold": {
+        "warm_hits": len(warm),
+        "cold_prepares": len(cold),
+        "speculative_joins": len(joins),
+        "warm_prepare_s": statistics.median(warm) if warm else None,
+        "cold_prepare_s": statistics.median(cold) if cold else None,
+        "speedup": (statistics.median(cold) / statistics.median(warm))
+        if warm and cold else None,
+        "prefetch_started": sched.prefetch.started if sched.prefetch else 0,
+    },
+    "pool": ctrl.world_pool.stats.to_dict(),
 }
 doc["analytic"] = {
     "system": "liver",
@@ -144,6 +179,14 @@ def main(argv=()) -> None:
         f"measured_pause={meas['pause_seconds']:.2f}s over "
         f"{payload['steps']} steps",
     )
+    wc = meas["warm_cold"]
+    emit(
+        "goodput/warm_cold_prepare",
+        (wc["warm_prepare_s"] or 0.0) * 1e6,
+        f"warm_hits={wc['warm_hits']};cold={wc['cold_prepares']};"
+        f"warm_median_s={wc['warm_prepare_s']};"
+        f"cold_median_s={wc['cold_prepare_s']};speedup={wc['speedup']}",
+    )
     emit("goodput/json", 0.0, path)
 
     if check:
@@ -156,6 +199,16 @@ def main(argv=()) -> None:
             raise SystemExit("no event committed through the live path")
         if not (0.0 < meas["goodput"] <= 1.0):
             raise SystemExit(f"implausible measured goodput {meas['goodput']}")
+        # warm pool gate: at least one resize must be served warm, and a
+        # warm Prepare (no lower+compile) must beat a cold one by >= 5x.
+        # No cold samples at all (every event warm/joined) is a PASS on the
+        # speedup clause — the pool performing perfectly must not fail CI.
+        if wc["warm_hits"] < 1:
+            raise SystemExit("no warm-hit resize: the world pool never served")
+        if wc["speedup"] is not None and wc["speedup"] < 5.0:
+            raise SystemExit(
+                f"warm prepare not >=5x faster than cold: {wc}"
+            )
 
 
 if __name__ == "__main__":

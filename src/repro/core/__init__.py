@@ -8,6 +8,7 @@
   generations    — Stable/Prepare/Ready/Switch/Cleanup state machine
   mock_groups    — abstract-mesh warmup (mock process groups)
   shadow         — background Shadow World construction
+  world_pool     — speculative warm world pool (cached WorldHandles)
   controller     — end-to-end LiveR controller + fail-stop fallback
   events         — elasticity event types
   downtime       — goodput/downtime accounting
@@ -25,11 +26,15 @@ def __getattr__(name):  # lazy: streaming pulls in repro.reshard (the engine)
         from repro.core import streaming
 
         return getattr(streaming, name)
+    if name == "WorldPool":  # lazy: world_pool pulls in shadow (jax)
+        from repro.core.world_pool import WorldPool
+
+        return WorldPool
     raise AttributeError(name)
 
 __all__ = [
     "TensorSpec", "View", "build_tensor_specs", "view_of",
     "TransferPlan", "TransferTask", "plan_transfer", "verify_completeness",
     "execute_plan", "materialize_rank", "allocate_destination",
-    "GenerationMachine", "GenState",
+    "GenerationMachine", "GenState", "WorldPool",
 ]

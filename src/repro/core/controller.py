@@ -38,7 +38,14 @@ from repro.core.reshard import (
     plan_state_transfer,
     rebuild_state,
 )
-from repro.core.shadow import ShadowBuilder, WorldHandle, build_train_world
+from repro.core.shadow import (
+    ShadowBuilder,
+    WorldHandle,
+    abstract_batch,
+    build_train_world,
+    build_update_world_fn,
+)
+from repro.core.world_pool import WorldPool
 from repro.data import SyntheticLM
 from repro.optim import AdamWConfig
 from repro.reshard import OverlapSession
@@ -67,6 +74,14 @@ class ReconfigRecord:
     outcome: str = "committed"
     # layers inherited from a superseded session at retarget
     reused_layers: int = 0
+    # Prepare served from the warm world pool (or residual shadow work):
+    # lower+compile skipped entirely. The DeadlineEstimator keeps separate
+    # warm/cold prepare estimates keyed on this flag.
+    warm_hit: bool = False
+    # how Prepare was served: "cold" (full build) | "pool" | "residual" |
+    # "speculative_join" (joined an in-flight prefetch — measures neither a
+    # warm nor a cold Prepare, so both estimators exclude it)
+    prepare_source: str = "cold"
     # plan-vs-live agreement (both sides from the one ReshardEngine path)
     plan_network_bytes: int = 0
     plan_local_bytes: int = 0
@@ -109,6 +124,8 @@ class LiveRController:
         stream_k: int = 4,
         source_policy: str = "nearest",
         sync_compile: bool = False,
+        world_pool: Optional[WorldPool] = None,
+        max_spec_builds: int = 1,
     ):
         self.cfg = cfg
         self.opt_cfg = opt_cfg
@@ -150,13 +167,16 @@ class LiveRController:
         self.ckpt_interval = ckpt_interval
         self._ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
         self._builder: Optional[ShadowBuilder] = None
+        # speculative warm world pool (DESIGN.md §12): retired/abandoned/
+        # prefetched worlds keyed by pool_key; warm hits skip lower+compile
+        self.world_pool = world_pool
+        self.max_spec_builds = max_spec_builds
+        self._spec_builders: dict[tuple, ShadowBuilder] = {}
 
-        # Active World (generation 0)
-        world = build_train_world(
-            cfg, parallel, opt_cfg, global_batch, seq_len,
-            microbatches=microbatches, devices=self._device_subset(parallel),
-            compression=compression, hint_version=hint_version,
-        )
+        # Active World (generation 0). With a pool, every world is built
+        # split-step so its update_fn is already warm if it later serves a
+        # streamed resize out of the pool.
+        world = self._build_world(parallel, split_step=world_pool is not None)
         world.gen_id = 0
         self.machine.active.payload = world
         from repro.distribution.step import init_train_state
@@ -173,6 +193,124 @@ class LiveRController:
     def _device_subset(self, parallel: ParallelConfig):
         return self.devices[: parallel.world_size]
 
+    def _build_world(self, target: ParallelConfig, split_step: bool) -> WorldHandle:
+        return build_train_world(
+            self.cfg,
+            target,
+            self.opt_cfg,
+            self.global_batch,
+            self.seq_len,
+            microbatches=self.microbatches,
+            devices=self._device_subset(target),
+            compression=self.compression,
+            hint_version=self.hint_version,
+            split_step=split_step,
+        )
+
+    # ------------------------------------------------------------------
+    # Warm world pool (DESIGN.md §12)
+    # ------------------------------------------------------------------
+    def pool_key(self, target: ParallelConfig) -> tuple:
+        """Pool identity of the world this controller would build for
+        ``target``: everything that shapes the compiled executables, plus
+        the device-set fingerprint — a world is warm only for the exact
+        devices its executables were loaded onto."""
+        fingerprint = tuple(
+            getattr(d, "id", i) for i, d in enumerate(self._device_subset(target))
+        )
+        return (
+            self.cfg,
+            target,
+            fingerprint,
+            self.global_batch,
+            self.seq_len,
+            self.microbatches,
+            self.compression,
+            self.hint_version,
+        )
+
+    def _refresh_pooled(
+        self, handle: WorldHandle, mode: str, source: str = "pool"
+    ) -> WorldHandle:
+        """Revalidate a warm world for use as the pending shadow: backfill
+        the split-step executable if this reconfiguration streams and the
+        cached build predates split-step mode (pool-bound builds always
+        split-step, so this is the rare path), and tag the timings so the
+        ReconfigRecord/DeadlineEstimator can tell warm from cold."""
+        assert not handle.released, "warm world was released while pooled"
+        handle.timings = dict(handle.timings)
+        handle.timings["warm_hit"] = source == "pool"
+        handle.timings["prepare_source"] = source
+        handle.plan_bundle = None  # src-dependent: always replanned below
+        if mode == "stream" and handle.update_fn is None:
+            t0 = time.perf_counter()
+            handle.update_fn = build_update_world_fn(
+                self.cfg, handle.mesh, handle.parallel, self.opt_cfg,
+                compression=self.compression,
+            )
+            handle.timings["update_compile_s"] = time.perf_counter() - t0
+        return handle
+
+    def _discard_world(self, handle: WorldHandle) -> None:
+        """An abandoned builder's completed world: keep it warm when a pool
+        exists (bounded — LRU eviction releases it), release its device
+        memory immediately otherwise. Runs on the orphaned build thread
+        when the abandon preceded completion; the pool is thread-safe."""
+        if self.world_pool is not None and not handle.released:
+            handle.gen_id = -1
+            handle.plan_bundle = None
+            self.world_pool.put(self.pool_key(handle.parallel), handle)
+        else:
+            handle.release()
+
+    def _retire_world(self, old_gen) -> None:
+        """Post-switch cleanup of the outgoing generation. With a pool the
+        old world stays warm — resizing back to a recently-left
+        configuration is the dominant elasticity pattern (walk-down then
+        walk-up) — otherwise the reference simply drops."""
+        world, old_gen.payload = old_gen.payload, None
+        if world is None or self.world_pool is None or world.released:
+            return
+        world.gen_id = -1
+        world.plan_bundle = None
+        self.world_pool.put(self.pool_key(world.parallel), world)
+
+    def _harvest_spec_builders(self) -> None:
+        """Deposit completed speculative builds into the pool. Build errors
+        are swallowed: speculation must never take down training (the same
+        target requested for real will rebuild — and re-raise — on the
+        normal path)."""
+        for key in [k for k, b in self._spec_builders.items() if b.ready]:
+            builder = self._spec_builders.pop(key)
+            try:
+                handle = builder.result(0)
+            except BaseException:
+                continue
+            self.world_pool.put(key, handle)
+
+    def prefetch_world(self, target: ParallelConfig) -> bool:
+        """Speculatively build ``target``'s world into the warm pool, off
+        the critical path (daemon thread, same interference profile as a
+        real Prepare). Never runs concurrently with a real reconfiguration
+        — the one-live-shadow invariant I2 is about *generations*, which
+        speculative builds never touch, but stacking compiles multiplies
+        steady-state interference for no deadline benefit. Returns True
+        when a build was started."""
+        if self.world_pool is None or self.reconfig_pending:
+            return False
+        if target == self.world.parallel:
+            return False
+        key = self.pool_key(target)
+        self._harvest_spec_builders()
+        if self.world_pool.contains(key) or key in self._spec_builders:
+            return False
+        if len(self._spec_builders) >= self.max_spec_builds:
+            return False
+        self._spec_builders[key] = ShadowBuilder(
+            lambda: self._build_world(target, split_step=True), gen_id=-1
+        ).start()
+        return True
+
     # ------------------------------------------------------------------
     # Prepare (background)
     # ------------------------------------------------------------------
@@ -184,6 +322,11 @@ class LiveRController:
         ``overlap`` overrides the constructor's transfer mode for THIS
         reconfiguration only — the deadline scheduler uses it to downgrade
         a single event to stop-copy without flipping the whole controller.
+
+        Consults the warm world pool first: a hit (or an in-flight
+        speculative build for the same key, which the Prepare thread joins)
+        skips lower+compile entirely and goes straight to transfer
+        planning.
         """
         if overlap is not None:
             assert overlap in ("stop_copy", "stream"), overlap
@@ -192,33 +335,61 @@ class LiveRController:
         gen = self.machine.begin_prepare(description=target.describe())
 
         src_parallel = self.world.parallel
+        warm = None
+        join = None
+        if self.world_pool is not None:
+            # take BEFORE any harvest: a harvest here could LRU-evict the
+            # very entry the deadline estimator just priced as warm. A
+            # ready-but-unharvested speculative builder is still caught by
+            # the join path below (its result() returns immediately).
+            warm = self.world_pool.take(self.pool_key(target))
+            if warm is None:
+                # a speculative build for this exact key is in flight:
+                # join it instead of duplicating the compile
+                join = self._spec_builders.pop(self.pool_key(target), None)
 
         def build():
-            handle = build_train_world(
-                self.cfg,
-                target,
-                self.opt_cfg,
-                self.global_batch,
-                self.seq_len,
-                microbatches=self.microbatches,
-                devices=self._device_subset(target),
-                compression=self.compression,
-                hint_version=self.hint_version,
-                split_step=mode == "stream",
-            )
+            handle = None
+            try:
+                if warm is not None:
+                    handle = self._refresh_pooled(warm, mode)
+                elif join is not None:
+                    handle = self._refresh_pooled(
+                        join.result(), mode, source="speculative_join"
+                    )
+            except BaseException:
+                # speculation must never fail the real resize: a broken
+                # warm/joined world falls back to a fresh cold build (the
+                # taken handle is released, not left pinned until GC)
+                if warm is not None:
+                    warm.release()
+                handle = None
+            if handle is None:
+                handle = self._build_world(
+                    target,
+                    split_step=mode == "stream" or self.world_pool is not None,
+                )
             # transfer planning is metadata-only — do it here, in the
             # Prepare thread, so the commit pause never pays it (paper:
             # planning runs during Prepare)
-            t0 = time.perf_counter()
-            specs, plan = plan_state_transfer(
-                self.cfg, src_parallel, target,
-                source_policy=self.source_policy,
-            )
-            handle.timings["plan_s"] = time.perf_counter() - t0
-            handle.plan_bundle = (src_parallel, specs, plan)
+            try:
+                t0 = time.perf_counter()
+                specs, plan = plan_state_transfer(
+                    self.cfg, src_parallel, target,
+                    source_policy=self.source_policy,
+                )
+                handle.timings["plan_s"] = time.perf_counter() - t0
+                handle.plan_bundle = (src_parallel, specs, plan)
+            except BaseException:
+                # the resize fails either way; re-pool (or release) the
+                # completed world rather than leaking it to GC
+                self._discard_world(handle)
+                raise
             return handle
 
-        self._builder = ShadowBuilder(build, gen.gen_id).start()
+        self._builder = ShadowBuilder(
+            build, gen.gen_id, on_discard=self._discard_world
+        ).start()
         return gen.gen_id
 
     def cancel_resize(self, outcome: Optional[str] = None) -> None:
@@ -382,13 +553,18 @@ class LiveRController:
         tokens = jnp.asarray(self.data.global_batch_at(self.step))
         batch = {"tokens": tokens}
         if self.cfg.family == "encdec":
+            # dtype must match the AOT lowering's abstract batch (see
+            # shadow.abstract_batch) or the compiled step rejects the input
             batch["frames"] = jnp.zeros(
-                (self.global_batch, self.seq_len, self.cfg.d_model), jnp.float32
+                (self.global_batch, self.seq_len, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype),
             )
         return batch
 
     def _poll_boundary(self) -> None:
         """Iteration boundary = the consistent cut (invariant I3)."""
+        if self._spec_builders:
+            self._harvest_spec_builders()
         if self._builder is None or not self._builder.ready:
             return
         if self.machine.state == GenState.PREPARE:
@@ -501,6 +677,8 @@ class LiveRController:
             prepare_s=new_world.timings.get("prepare_total_s", 0.0),
             mode="live_overlap",
             plan_s=self._plan_seconds,
+            warm_hit=bool(new_world.timings.get("warm_hit", False)),
+            prepare_source=new_world.timings.get("prepare_source", "cold"),
         )
         # retarget reuse: continue from the superseded session's streamed
         # state instead of restarting the stream from scratch
@@ -544,16 +722,7 @@ class LiveRController:
             parallel=world.parallel,
         )
         aparams = abstract_params(self.cfg)
-        abatch = {
-            "tokens": jax.ShapeDtypeStruct(
-                (self.global_batch, self.seq_len), jnp.int32
-            )
-        }
-        if self.cfg.family == "encdec":
-            abatch["frames"] = jax.ShapeDtypeStruct(
-                (self.global_batch, self.seq_len, self.cfg.d_model),
-                {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[self.cfg.dtype],
-            )
+        abatch = abstract_batch(self.cfg, self.global_batch, self.seq_len)
         return jitted.lower(aparams, abatch).compile()
 
     # ------------------------------------------------------------------
@@ -573,6 +742,8 @@ class LiveRController:
             plan_local_bytes=plan.local_bytes,
             layers_total=len(plan.layers()),
             plan_s=self._plan_seconds,
+            warm_hit=bool(new_world.timings.get("warm_hit", False)),
+            prepare_source=new_world.timings.get("prepare_source", "cold"),
         )
         pause_start = time.perf_counter()
         self.machine.begin_switch(gen_id)
@@ -624,9 +795,10 @@ class LiveRController:
         self.records.append(rec)
         self._reset_reconfig_state()
 
-        # 4. cleanup (old world resources released; source arrays freed as
-        # the last references drop with the old generation)
-        old.payload = None
+        # 4. cleanup (old world retires into the warm pool when one exists,
+        # else its resources release; source arrays freed as the last
+        # references drop with the old generation)
+        self._retire_world(old)
         self.machine.finish_cleanup()
 
     # ------------------------------------------------------------------
@@ -738,7 +910,7 @@ class LiveRController:
         self.records.append(rec)
         self._reset_reconfig_state()
 
-        old.payload = None
+        self._retire_world(old)
         self.machine.finish_cleanup()
         return {"loss": loss, **om}
 
@@ -770,9 +942,23 @@ class LiveRController:
             )
             self._ckpt.wait()
 
-    def fail_stop_recover(self, target: ParallelConfig) -> ReconfigRecord:
-        """Unannounced failure: rebuild from the latest durable checkpoint."""
+    def fail_stop_recover(
+        self, target: ParallelConfig, devices_failed: bool = True
+    ) -> ReconfigRecord:
+        """Rebuild from the latest durable checkpoint.
+
+        ``devices_failed`` distinguishes an unannounced failure (devices
+        in the old world are suspect: the outgoing world is NOT pooled and
+        pooled worlds needing more devices than ``target`` are
+        invalidated — under prefix allocation they overlap the suspect
+        set) from the scheduler's checkpoint rung for a *warned* event
+        (devices are fine, only the window was too short — warm worlds
+        stay valid)."""
         assert self.ckpt_dir, "fallback requires a checkpoint directory"
+        if devices_failed and self.world_pool is not None:
+            self.world_pool.invalidate(
+                lambda key, h: h.parallel.world_size > target.world_size
+            )
         if self._ckpt:
             self._ckpt.wait()
         rec = ReconfigRecord(
@@ -798,11 +984,18 @@ class LiveRController:
         self._reset_reconfig_state()
 
         t0 = time.perf_counter()
-        world = residual or build_train_world(
-            self.cfg, target, self.opt_cfg, self.global_batch, self.seq_len,
-            microbatches=self.microbatches, devices=self._device_subset(target),
-            compression=self.compression, hint_version=self.hint_version,
-        )
+        world = residual
+        rec.prepare_source = "residual" if residual is not None else "cold"
+        if world is None and self.world_pool is not None:
+            # warm pool: same graceful degradation as residual shadow work
+            world = self.world_pool.take(self.pool_key(target))
+            if world is not None:
+                rec.prepare_source = "pool"
+        rec.warm_hit = world is not None
+        if world is None:
+            world = self._build_world(
+                target, split_step=self.world_pool is not None
+            )
         init_s = time.perf_counter() - t0
 
         t0 = time.perf_counter()
@@ -819,7 +1012,14 @@ class LiveRController:
         self.machine.mark_ready(gen.gen_id, payload=world)
         self.machine.begin_switch(gen.gen_id)
         old = self.machine.commit_switch(gen.gen_id)
-        old.payload = None
+        if devices_failed:
+            # the outgoing world ran on the (partially) failed device set:
+            # never pool it — a later walk-up would compute the same
+            # fingerprint from the static device list and serve executables
+            # loaded onto a dead device
+            old.payload = None
+        else:
+            self._retire_world(old)
         self.machine.finish_cleanup()
 
         rec.transfer_s = load_s

@@ -48,27 +48,62 @@ class WorldHandle:
     # (src ParallelConfig, specs, TransferPlan) computed during Prepare so
     # the commit pause never pays the planning cost
     plan_bundle: Any = None
+    released: bool = False
+
+    def release(self) -> None:
+        """Drop the executables/mesh/sharding references so device memory
+        (compiled programs and their embedded constants) is reclaimable
+        immediately instead of whenever GC finds the handle. Idempotent;
+        a released handle must never be trained on or pooled again."""
+        self.step_fn = None
+        self.update_fn = None
+        self.grad_fn = None
+        self.shardings = None
+        self.mesh = None
+        self.plan_bundle = None
+        self.released = True
 
 
 class ShadowBuilder:
     """Builds a WorldHandle in a daemon thread; poll ``ready`` — the
-    Companion Manager thread of the paper's §4.5.1."""
+    Companion Manager thread of the paper's §4.5.1.
 
-    def __init__(self, build_fn: Callable[[], WorldHandle], gen_id: int):
+    ``on_discard`` is invoked exactly once with the completed handle when
+    the builder was abandoned — from the worker thread if the abandon
+    preceded completion, from ``abandon()`` itself otherwise. The default
+    releases the world's device memory (an orphaned build used to pin its
+    mesh + executables until GC); the controller overrides it to deposit
+    the world into the warm :class:`~repro.core.world_pool.WorldPool`.
+    """
+
+    def __init__(
+        self,
+        build_fn: Callable[[], WorldHandle],
+        gen_id: int,
+        on_discard: Optional[Callable[[WorldHandle], None]] = None,
+    ):
         self._build_fn = build_fn
         self.gen_id = gen_id
         self._result: Optional[WorldHandle] = None
         self._error: Optional[BaseException] = None
         self._done = threading.Event()
         self._thread = threading.Thread(target=self._run, daemon=True)
-        self.started_at = time.perf_counter()
+        # stamped when the worker thread starts, NOT at construction:
+        # callers (the warm pool above all) routinely construct builders
+        # well before starting them, and stamping in __init__ silently
+        # inflated prepare_total_s by the construction→start gap
+        self.started_at: Optional[float] = None
         self.abandoned = False
+        self._on_discard = on_discard
+        self._discard_lock = threading.Lock()
+        self._discarded = False
 
     def start(self) -> "ShadowBuilder":
         self._thread.start()
         return self
 
     def _run(self) -> None:
+        self.started_at = time.perf_counter()
         try:
             handle = self._build_fn()
             handle.gen_id = self.gen_id
@@ -78,18 +113,33 @@ class ShadowBuilder:
             self._error = e
         finally:
             self._done.set()
+        self._maybe_discard()
 
     @property
     def ready(self) -> bool:
         return self._done.is_set()
 
+    def _maybe_discard(self) -> None:
+        with self._discard_lock:
+            if not self.abandoned or self._discarded or self._result is None:
+                return
+            self._discarded = True
+            handle = self._result
+        if self._on_discard is not None:
+            self._on_discard(handle)
+        else:
+            handle.release()
+
     def abandon(self) -> None:
         """Retarget/cancel semantics (paper §7 'Concurrent reconfiguration
         events'): the daemon thread cannot be killed mid-``compile()``, so
         the builder is marked abandoned and its world discarded on
-        completion. The controller may start a fresh builder immediately —
-        the stale thread only ever writes into this object."""
+        completion (``on_discard`` — release or pool deposit; it no longer
+        lingers until GC). The controller may start a fresh builder
+        immediately — the stale thread only ever writes into this object."""
         self.abandoned = True
+        if self._done.is_set():
+            self._maybe_discard()
 
     def result(self, timeout: Optional[float] = None) -> WorldHandle:
         if not self._done.wait(timeout):
@@ -98,6 +148,66 @@ class ShadowBuilder:
             raise self._error
         assert self._result is not None
         return self._result
+
+
+def abstract_batch(cfg: ModelConfig, global_batch: int, seq_len: int) -> dict:
+    """Abstract batch pytree for AOT lowering (and its compile-time shape
+    contract). ``frames`` resolves the configured compute dtype through
+    ``jnp.dtype`` — the old two-entry ``{"bfloat16","float32"}`` literal
+    map raised KeyError for every other configured dtype (float16, fp8
+    experiments, ...)."""
+    import jax.numpy as jnp
+
+    abatch = {"tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)}
+    if cfg.family == "encdec":
+        abatch["frames"] = jax.ShapeDtypeStruct(
+            (global_batch, seq_len, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    return abatch
+
+
+def _abstract_opt(cfg: ModelConfig, aparams, compression: str):
+    """Abstract optimizer state matching ``adamw_init`` (+ error-feedback
+    buffers under int8_ef compression)."""
+    import jax.numpy as jnp
+
+    from repro.optim import adamw_init
+
+    aopt = jax.eval_shape(lambda: adamw_init(aparams))
+    if compression == "int8_ef":
+        aopt = dict(aopt)
+        aopt["ef"] = jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), aparams
+        )
+    return aopt
+
+
+def build_update_world_fn(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    parallel: ParallelConfig,
+    opt_cfg,
+    compression: str = "none",
+    aot: bool = True,
+):
+    """Optimizer-only executable for the split-step commit of ``mesh``'s
+    world. Factored out of :func:`build_train_world` so a warm pool hit
+    whose cached handle predates split-step mode can backfill ``update_fn``
+    without re-running the full Prepare."""
+    from repro.distribution.step import jit_update_step
+    from repro.models.model import abstract_params
+
+    jitted_u, _ = jit_update_step(
+        cfg, mesh, opt_cfg, compression=compression, parallel=parallel
+    )
+    if not aot:
+        return jitted_u
+    aparams = abstract_params(cfg)
+    aopt = _abstract_opt(cfg, aparams, compression)
+    agrads = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), aparams
+    )
+    return jitted_u.lower(agrads, aopt, aparams).compile()
 
 
 def build_train_world(
@@ -114,12 +224,9 @@ def build_train_world(
     split_step: bool = False,
 ) -> WorldHandle:
     """Synchronous world construction (the shadow thread's body)."""
-    import jax.numpy as jnp
-
     from repro.distribution.sharding import make_elastic_mesh
     from repro.distribution.step import jit_train_step
     from repro.models.model import abstract_params
-    from repro.optim import adamw_init
 
     timings: dict = {}
     t0 = time.perf_counter()
@@ -146,18 +253,8 @@ def build_train_world(
     step_fn = jitted
     if aot:
         aparams = abstract_params(cfg)
-        aopt = jax.eval_shape(lambda: adamw_init(aparams))
-        if compression == "int8_ef":
-            aopt = dict(aopt)
-            aopt["ef"] = jax.tree_util.tree_map(
-                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), aparams
-            )
-        abatch = {"tokens": jax.ShapeDtypeStruct((global_batch, seq_len), jnp.int32)}
-        if cfg.family == "encdec":
-            abatch["frames"] = jax.ShapeDtypeStruct(
-                (global_batch, seq_len, cfg.d_model),
-                {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype],
-            )
+        aopt = _abstract_opt(cfg, aparams, compression)
+        abatch = abstract_batch(cfg, global_batch, seq_len)
         t0 = time.perf_counter()
         lowered = jitted.lower(aparams, aopt, abatch)  # mock-warmup analogue
         timings["lower_s"] = time.perf_counter() - t0
@@ -169,27 +266,11 @@ def build_train_world(
     if split_step:
         # optimizer-only executable for the split-step commit: compiled
         # here, in the shadow thread, so the commit pause never pays it
-        from repro.distribution.step import jit_update_step
-
-        jitted_u, _ = jit_update_step(
-            cfg, mesh, opt_cfg, compression=compression, parallel=parallel
+        t0 = time.perf_counter()
+        update_fn = build_update_world_fn(
+            cfg, mesh, parallel, opt_cfg, compression=compression, aot=aot
         )
-        if aot:
-            aparams = abstract_params(cfg)
-            aopt = jax.eval_shape(lambda: adamw_init(aparams))
-            if compression == "int8_ef":
-                aopt = dict(aopt)
-                aopt["ef"] = jax.tree_util.tree_map(
-                    lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), aparams
-                )
-            agrads = jax.tree_util.tree_map(
-                lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), aparams
-            )
-            t0 = time.perf_counter()
-            update_fn = jitted_u.lower(agrads, aopt, aparams).compile()
-            timings["update_compile_s"] = time.perf_counter() - t0
-        else:
-            update_fn = jitted_u
+        timings["update_compile_s"] = time.perf_counter() - t0
 
     return WorldHandle(
         parallel=parallel,

@@ -138,6 +138,52 @@ def search(
     return sorted(cands, key=lambda c: c.score)
 
 
+def likely_next_targets(
+    cfg: ModelConfig,
+    current: ParallelConfig,
+    max_world: int,
+    global_batch: int,
+    seq_len: int,
+    k: int = 2,
+    factors: tuple[float, ...] = (0.5, 2.0),
+    max_pp: int = 8,
+    transition_weight: float = 0.0,
+) -> list[ParallelConfig]:
+    """The warm pool's prefetch candidates (DESIGN.md §12).
+
+    Elasticity events overwhelmingly halve or double capacity (spot
+    reclaim takes a node group; walk-up returns it), so the likely next
+    device counts are the walk-down/walk-up neighbors of the current
+    world. For each neighbor count this returns the search's ranked
+    feasible configurations, merged round-robin across counts (best of
+    each neighbor first), deduplicated, excluding the current config,
+    capped at ``k`` — the top-k targets a speculative
+    ``prefetch_world`` should build while the controller is idle.
+    """
+    ranked: list[list[ParallelConfig]] = []
+    seen_counts = {current.world_size}
+    for f in factors:
+        world = max(1, min(max_world, int(round(current.world_size * f))))
+        if world in seen_counts:
+            continue
+        seen_counts.add(world)
+        cands = search(
+            cfg, world, global_batch, seq_len, current=current,
+            transition_weight=transition_weight, max_pp=max_pp,
+        )
+        ranked.append([c.parallel for c in cands if c.parallel != current])
+    out: list[ParallelConfig] = []
+    depth = 0
+    while len(out) < k and any(depth < len(r) for r in ranked):
+        for r in ranked:
+            if depth < len(r) and r[depth] not in out:
+                out.append(r[depth])
+                if len(out) >= k:
+                    break
+        depth += 1
+    return out[:k]
+
+
 def best_target(
     cfg: ModelConfig,
     world: int,

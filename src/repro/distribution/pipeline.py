@@ -93,7 +93,7 @@ def make_pipeline_loss(
         mb = Bl // microbatches
         toks = tokens.reshape(microbatches, mb, S)
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (mb, S))
-        adt = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+        adt = jnp.dtype(cfg.dtype)
         d = cfg.d_model
         T = microbatches + pp - 1
         x_sh = buf_sharding(mb, 2)

@@ -11,6 +11,7 @@ from repro.elastic.scheduler import (
     DeadlineEstimator,
     ElasticScheduler,
     EventOutcome,
+    PrefetchPolicy,
     ReconfigEstimate,
     ScheduleReport,
     choose_mode,
@@ -21,6 +22,7 @@ __all__ = [
     "DeadlineEstimator",
     "ElasticScheduler",
     "EventOutcome",
+    "PrefetchPolicy",
     "ReconfigEstimate",
     "ScheduleReport",
     "choose_mode",

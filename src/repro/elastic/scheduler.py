@@ -55,6 +55,9 @@ class ReconfigEstimate:
     plan_bytes: int
     rounds: int
     step_s: float
+    # prepare_s is the WARM estimate: the controller's pool holds a ready
+    # world for the target, so Prepare skips lower+compile
+    warm: bool = False
 
     @property
     def stream_total_s(self) -> float:
@@ -107,29 +110,64 @@ class DeadlineEstimator:
         self,
         controller,
         default_prepare_s: float = 20.0,
+        default_warm_prepare_s: float = 1.0,
         default_bw_bytes_s: float = 1e9,
         default_step_s: float = 0.25,
         history: int = 8,
     ):
         self.ctrl = controller
         self.default_prepare_s = default_prepare_s
+        self.default_warm_prepare_s = default_warm_prepare_s
         self.default_bw = default_bw_bytes_s
         self.default_step_s = default_step_s
         self.history = history
 
     # -- history --------------------------------------------------------
-    def _recent(self) -> list:
+    def _recent(self, warm: Optional[bool] = None) -> list:
+        # every record whose Prepare actually completed is a valid sample,
+        # not just committed ones: after a retarget-heavy stretch the
+        # committed subset can be empty and a committed-only filter made
+        # the estimator silently fall back to its defaults. ``fell_back``
+        # on a live mode means an escalated commit (prepare finished);
+        # ``retargeted`` records count only when their prepare finished
+        # before supersession (prepare_s > 0 — mid-prepare retargets
+        # carry no timing).
         recs = [
             r
             for r in self.ctrl.records
-            if r.mode in ("live", "live_overlap") and r.outcome == "committed"
+            if r.mode in ("live", "live_overlap")
+            and (r.outcome in ("committed", "fell_back") or r.prepare_s > 0)
         ]
+        if warm is not None:
+            if warm:
+                recs = [r for r in recs if getattr(r, "warm_hit", False)]
+            else:
+                # a speculative join measures neither a warm Prepare (the
+                # compile ran) nor a cold one (only the residual wait was
+                # timed) — sampling it as cold would drag the cold median
+                # toward zero and mis-rank the lattice for true cold events
+                recs = [
+                    r
+                    for r in recs
+                    if not getattr(r, "warm_hit", False)
+                    and getattr(r, "prepare_source", "cold")
+                    != "speculative_join"
+                ]
         return recs[-self.history :]
 
-    def prepare_estimate(self) -> float:
-        m = _median([r.prepare_s for r in self._recent()])
+    def prepare_estimate(self, warm: bool = False) -> float:
+        """Median prepare time over recent records of the requested kind:
+        warm (pool hit — lower+compile skipped) and cold prepares differ by
+        orders of magnitude, so one blended median would make the lattice
+        reject the overlap rung exactly when a warm world makes it cheap."""
+        m = _median([r.prepare_s for r in self._recent(warm=warm)])
         if m is not None:
             return m
+        if warm:
+            # no warm history yet: a pool hit skips lower+compile, leaving
+            # planning + bookkeeping — bounded above by the cold estimate
+            return min(self.prepare_estimate(warm=False),
+                       self.default_warm_prepare_s)
         # cold start: the gen-0 world's own build timings are the best proxy
         t = self.ctrl.world.timings
         seed = sum(t.get(k, 0.0) for k in ("mesh_s", "lower_s", "compile_s"))
@@ -169,14 +207,24 @@ class DeadlineEstimator:
         )
         return plan.network_bytes + plan.local_bytes, len(plan.layers())
 
+    def _pool_warm(self, target) -> bool:
+        """True when the controller's warm pool holds a ready world for
+        ``target`` (Prepare will skip lower+compile)."""
+        pool = getattr(self.ctrl, "world_pool", None)
+        if pool is None or not hasattr(self.ctrl, "pool_key"):
+            return False
+        return pool.contains(self.ctrl.pool_key(target))
+
     def estimate(self, target) -> ReconfigEstimate:
         plan_bytes, layers = self._plan_for(target)
         bw = self.bandwidth_estimate()
         step_s = self.step_estimate()
         rounds = math.ceil(layers / max(1, self.ctrl.stream_k))
         transfer_s = plan_bytes / bw
+        warm = self._pool_warm(target)
         return ReconfigEstimate(
-            prepare_s=self.prepare_estimate(),
+            prepare_s=self.prepare_estimate(warm=warm),
+            warm=warm,
             # one pre-copy round per iteration boundary, each hiding its
             # bytes under a training step (dispatch rides the boundary)
             precopy_s=rounds * step_s,
@@ -189,6 +237,79 @@ class DeadlineEstimator:
             rounds=rounds,
             step_s=step_s,
         )
+
+
+# ---------------------------------------------------------------------------
+# Speculative warm-pool prefetch (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+class PrefetchPolicy:
+    """Fills the controller's warm world pool while the event loop is idle.
+
+    Each ``tick`` (called by the scheduler on steps with no pending event)
+    asks the topology search for the likely next targets — the best
+    feasible configurations at the walk-down/walk-up neighbor device
+    counts of the current world (:func:`likely_next_targets`) — and starts
+    speculative builds via ``controller.prefetch_world``. The controller
+    enforces the guardrails: never while a real reconfiguration is in
+    flight, at most ``max_spec_builds`` concurrent compiles, skip targets
+    already pooled or building. Candidate enumeration is re-planned per
+    tick because the current world (and hence its neighbors) changes with
+    every commit; the search itself is metadata-only and cheap.
+    """
+
+    def __init__(
+        self,
+        controller,
+        k: int = 2,
+        factors: tuple[float, ...] = (0.5, 2.0),
+        max_pp: int = 8,
+    ):
+        self.ctrl = controller
+        self.k = k
+        self.factors = factors
+        # must cover the pp range of the event stream's own targets (e.g.
+        # events_from_trace's max_pp) or a prefetched pp=1 world can never
+        # match a pp>1 event's pool key — wasted builds that evict genuinely
+        # useful entries. Pass the same bound you give the trace mapper.
+        self.max_pp = max_pp
+        self.started = 0
+        # candidates only change when the active world does (a commit);
+        # cache them so idle ticks don't re-run the topology search
+        self._cands_for = None
+        self._cands: list = []
+
+    def candidates(self) -> list:
+        from repro.core.topology_search import likely_next_targets
+
+        ctrl = self.ctrl
+        return likely_next_targets(
+            ctrl.cfg,
+            ctrl.world.parallel,
+            len(ctrl.devices),
+            ctrl.global_batch,
+            ctrl.seq_len,
+            k=self.k,
+            factors=self.factors,
+            max_pp=self.max_pp,
+        )
+
+    def tick(self) -> int:
+        """Start speculative builds for the current candidates; returns
+        how many were started (0 when pooled/building/busy)."""
+        if getattr(self.ctrl, "reconfig_pending", False):
+            return 0  # the controller would refuse anyway; skip the search
+        current = self.ctrl.world.parallel
+        if current != self._cands_for:
+            self._cands_for = current
+            self._cands = self.candidates()
+        started = 0
+        for target in self._cands:
+            if self.ctrl.prefetch_world(target):
+                started += 1
+        self.started += started
+        return started
 
 
 # ---------------------------------------------------------------------------
@@ -287,6 +408,8 @@ class ElasticScheduler:
         tail_steps: int = 2,
         max_steps: int = 5000,
         on_event: Optional[Callable[[EventOutcome], None]] = None,
+        prefetch_k: int = 0,
+        prefetch: Optional["PrefetchPolicy"] = None,
     ):
         self.ctrl = controller
         self.time_scale = time_scale
@@ -297,6 +420,17 @@ class ElasticScheduler:
         self.tail_steps = tail_steps
         self.max_steps = max_steps
         self.on_event = on_event
+        # speculative warm-pool prefetch: a fully-configured policy takes
+        # precedence (set its max_pp to the trace mapper's!); prefetch_k is
+        # the default-config convenience. Either way only when the
+        # controller actually carries a pool.
+        self.prefetch: Optional[PrefetchPolicy] = prefetch
+        if (
+            self.prefetch is None
+            and prefetch_k > 0
+            and getattr(controller, "world_pool", None) is not None
+        ):
+            self.prefetch = PrefetchPolicy(controller, k=prefetch_k)
         self.clock = 0.0
         self.total_steps = 0
         self.outcomes: list[EventOutcome] = []
@@ -320,6 +454,11 @@ class ElasticScheduler:
         self.total_steps += 1
         self._absorb()
         self._enforce_deadline()
+        if self.prefetch is not None and self._pending is None:
+            # idle between events: warm the pool for the likely next
+            # targets (speculative build threads; never during a real
+            # reconfiguration — the controller refuses then)
+            self.prefetch.tick()
 
     def _advance_to(self, t: float) -> None:
         while self.clock < t:
@@ -376,14 +515,23 @@ class ElasticScheduler:
 
     # -- fallback rungs --------------------------------------------------
     def _restore(self, target, o: EventOutcome, save_first: bool) -> None:
-        """Checkpoint rung: durable save (when warned) + stop-and-restart."""
+        """Checkpoint rung: durable save (when warned) + stop-and-restart.
+
+        ``save_first`` doubles as the device-health signal: a warned event
+        saves inside the window and its devices are fine (warm worlds stay
+        valid); an unannounced fail-stop cannot save and its devices are
+        suspect (``devices_failed`` purges overlapping pool entries)."""
         if not self.ctrl.ckpt_dir:
             o.outcome = "aborted"
             return
         if save_first:
             self._clocked(self.ctrl.checkpoint_now)
         try:
-            rec = self._clocked(lambda: self.ctrl.fail_stop_recover(target))
+            rec = self._clocked(
+                lambda: self.ctrl.fail_stop_recover(
+                    target, devices_failed=not save_first
+                )
+            )
         except AssertionError:
             # unannounced failure before the first durable save landed:
             # nothing to restore from — the honest outcome is an abort

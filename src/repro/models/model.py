@@ -22,7 +22,9 @@ from repro.models import transformer as T
 
 
 def _dtype(name: str):
-    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[name]
+    # jnp.dtype resolves any registered dtype name; a literal two-entry map
+    # here raised KeyError for e.g. float16 (see shadow.abstract_batch)
+    return jnp.dtype(name)
 
 
 # ---------------------------------------------------------------------------

@@ -145,6 +145,7 @@ class OverlapSession:
 
         assert not self.streamed_at, "adopt() must precede streaming"
         adopted: set[str] = set()
+        relayout: list[tuple[str, Any, Any]] = []  # (name, leaf, sh_new)
         for name, sh_new in self.executor.target_shardings.items():
             leaf = carries.get(name)
             sh_old = old_targets.get(name)
@@ -156,8 +157,19 @@ class OverlapSession:
             if _layout_agrees(sh_old, sh_new, tuple(leaf.shape)):
                 self.executor.dst[name] = leaf
             else:
-                self.executor.dst[name] = jax.device_put(leaf, sh_new)
+                relayout.append((name, leaf, sh_new))
             adopted.add(name)
+        if relayout:
+            # one batched relayout: device_put takes a pytree of arrays and
+            # a matching pytree of shardings, so every mismatched carry
+            # moves in a single dispatch instead of one host round-trip
+            # per leaf
+            moved = jax.device_put(
+                [leaf for _, leaf, _ in relayout],
+                [sh for _, _, sh in relayout],
+            )
+            for (name, _, _), leaf in zip(relayout, moved):
+                self.executor.dst[name] = leaf
         # a layer is reused iff the old session streamed it AND every
         # tensor its tasks touch has an adopted carry
         reused = [
