@@ -1,0 +1,177 @@
+"""Delta-aware plan IR benchmark (ISSUE 6 acceptance gate).
+
+Runs a resize matrix chosen to span the three cell classes of the
+classified plan IR (DESIGN.md §13):
+
+  * ``tp_preserving``  dp2tp2 -> dp1tp2 — every surviving shard is
+    byte-identical: the whole plan classifies **resident** and the delta
+    executor moves zero bytes (aliasing pass-throughs only);
+  * ``dp_only``        dp1tp2 -> dp2tp2 — surviving ranks resident, the
+    grown replica group fed by **remote** broadcasts;
+  * ``mixed``          dp2tp2 -> dp1tp4 — tp width changes, so cells
+    split **local**/**remote** and nothing is resident.
+
+For each scenario it reports the plan's kind-byte breakdown, the layers
+skipped (``reused_layers``), and bytes physically moved by the live
+executor under delta streaming vs the ``delta=False`` full-copy baseline
+(resident cells demoted to moves). For the tp-preserving scenario it also
+times the end-to-end commit at two model sizes — resident skipping makes
+that latency near-constant in model size instead of linear.
+
+Emits the usual ``name,us,derived`` CSV rows and writes
+``results/BENCH_delta.json``. ``--smoke`` shrinks sizes for CI;
+``--check`` exits nonzero unless a resident-heavy scenario reports
+``reused_layers > 0`` AND delta streaming moved strictly fewer bytes than
+the full-copy baseline on at least one scenario.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.common import emit, run_with_devices, write_results
+
+_SNIPPET = """
+import json, time
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs.base import ParallelConfig
+from repro.core.intersection import plan_transfer
+from repro.core.resource_view import TensorSpec
+from repro.distribution.sharding import make_elastic_mesh
+from repro.reshard import LiveExecutor, ReshardEngine
+
+L, ROWS, COLS, ITERS = __L__, __ROWS__, __COLS__, __ITERS__
+ROLE_AXIS = {"pp": "pipe", "tp": "model", "dp": "data", "none": None}
+
+def make_specs(layers, rows, cols):
+    return [
+        TensorSpec("params/blocks/pos0/w", (layers, rows, cols), "float32",
+                   ("pp", "none", "tp"), "stages", "params"),
+        TensorSpec("params/embed/tok", (rows * 4, cols), "float32",
+                   ("tp", "none"), "first", "params"),
+    ]
+
+def sharding_for(s, mesh):
+    return NamedSharding(mesh, P(*[ROLE_AXIS[r] for r in s.roles]))
+
+def run_live(specs, plan, ca, cb, delta):
+    mesh_a, mesh_b = make_elastic_mesh(ca), make_elastic_mesh(cb)
+    rng = np.random.default_rng(0)
+    src = {s.name: jax.device_put(
+        jnp.asarray(rng.normal(size=s.shape).astype(s.dtype)),
+        sharding_for(s, mesh_a)) for s in specs}
+    targets = {s.name: sharding_for(s, mesh_b) for s in specs}
+    ex = LiveExecutor({s.name: s for s in specs}, src, targets, 1 << 20)
+    eng = ReshardEngine(plan, ex, staging_bytes=1 << 20, delta=delta)
+    stats = eng.run(); ex.block_until_ready()  # warm executables + carries
+    ts = []
+    for _ in range(ITERS):
+        ex.reset_round()
+        t0 = time.perf_counter()
+        stats = eng.run()
+        ex.block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    return stats, min(ts), ex
+
+SCENARIOS = [
+    ("tp_preserving", ParallelConfig(dp=2, tp=2), ParallelConfig(dp=1, tp=2)),
+    ("dp_only",       ParallelConfig(dp=1, tp=2), ParallelConfig(dp=2, tp=2)),
+    ("mixed",         ParallelConfig(dp=2, tp=2), ParallelConfig(dp=1, tp=4)),
+]
+records = []
+for name, ca, cb in SCENARIOS:
+    specs = make_specs(L, ROWS, COLS)
+    plan = plan_transfer(specs, ca, cb, num_positions=1)
+    d_stats, d_s, d_ex = run_live(specs, plan, ca, cb, delta=True)
+    b_stats, b_s, _ = run_live(specs, plan, ca, cb, delta=False)
+    records.append({
+        "scenario": name,
+        "src": str(ca), "dst": str(cb),
+        "kind_bytes": plan.kind_bytes(),
+        "layers_total": len(plan.layers()),
+        "reused_layers": len(plan.resident_layers()),
+        "resident_passthroughs": d_ex.resident_passthroughs,
+        "delta_moved_bytes": d_stats.executed_bytes,
+        "delta_skipped_bytes": d_stats.resident_bytes,
+        "delta_commit_ms": d_s * 1e3,
+        "baseline_moved_bytes": b_stats.executed_bytes,
+        "baseline_commit_ms": b_s * 1e3,
+    })
+
+# commit latency vs model size on the resident-heavy transition: with
+# every layer skipped, latency must not scale with the byte count
+ca, cb = ParallelConfig(dp=2, tp=2), ParallelConfig(dp=1, tp=2)
+size_lat = []
+for scale in (1, 4):
+    specs = make_specs(L, ROWS * scale, COLS)
+    plan = plan_transfer(specs, ca, cb, num_positions=1)
+    _, s, _ = run_live(specs, plan, ca, cb, delta=True)
+    size_lat.append({
+        "rows": ROWS * scale,
+        "plan_bytes": sum(t.nbytes for t in plan.tasks),
+        "commit_ms": s * 1e3,
+    })
+
+print("JSON " + json.dumps({
+    "config": {"layers": L, "rows": ROWS, "cols": COLS, "iters": ITERS},
+    "scenarios": records,
+    "size_sweep_tp_preserving": size_lat,
+}))
+"""
+
+
+def main(argv=()) -> None:
+    smoke = "--smoke" in argv
+    check = "--check" in argv
+    L, rows, cols, iters = (4, 16, 32, 2) if smoke else (8, 64, 128, 5)
+    code = (
+        _SNIPPET.replace("__L__", str(L))
+        .replace("__ROWS__", str(rows))
+        .replace("__COLS__", str(cols))
+        .replace("__ITERS__", str(iters))
+    )
+    out = run_with_devices(code, n_devices=8)
+    payload = None
+    for line in out.splitlines():
+        if line.startswith("JSON "):
+            payload = json.loads(line[5:])
+    assert payload is not None, f"no JSON payload in bench output:\n{out[-2000:]}"
+
+    reuse_ok = any(r["reused_layers"] > 0 for r in payload["scenarios"])
+    bytes_ok = any(
+        r["delta_moved_bytes"] < r["baseline_moved_bytes"]
+        for r in payload["scenarios"]
+    )
+    payload["reuse_ok"] = reuse_ok
+    payload["bytes_ok"] = bytes_ok
+
+    path = write_results("delta", payload, mode="smoke" if smoke else "full")
+
+    for r in payload["scenarios"]:
+        kb = r["kind_bytes"]
+        emit(
+            f"delta/{r['scenario']}", r["delta_commit_ms"] * 1e3,
+            f"resident={kb['resident']}B;local={kb['local']}B;"
+            f"remote={kb['remote']}B;reused_layers={r['reused_layers']}/"
+            f"{r['layers_total']};moved={r['delta_moved_bytes']}B"
+            f"(baseline={r['baseline_moved_bytes']}B);"
+            f"baseline_ms={r['baseline_commit_ms']:.1f}",
+        )
+    sweep = payload["size_sweep_tp_preserving"]
+    ratio = sweep[-1]["commit_ms"] / max(sweep[0]["commit_ms"], 1e-9)
+    byte_ratio = sweep[-1]["plan_bytes"] / max(sweep[0]["plan_bytes"], 1)
+    emit(
+        "delta/size_sweep", sweep[-1]["commit_ms"] * 1e3,
+        f"latency_ratio={ratio:.2f}x_for_{byte_ratio:.0f}x_bytes",
+    )
+    emit("delta/json", 0.0, path)
+    if check and not (reuse_ok and bytes_ok):
+        raise SystemExit(
+            f"delta gates failed: reuse_ok={reuse_ok} bytes_ok={bytes_ok}"
+        )
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

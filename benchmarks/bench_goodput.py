@@ -13,12 +13,15 @@ scheduler's prefetch policy (DESIGN.md §12): retired/abandoned/prefetched
 worlds serve later resizes warm, skipping lower+compile. The payload's
 ``measured.warm_cold`` section breaks prepare time down by warm vs cold.
 
-``--smoke`` replays a fixed 6-event trace exercising every rung of the
+``--smoke`` replays a fixed 7-event trace exercising every rung of the
 fallback lattice (stream commit, mid-prepare retarget, coalesce,
-too-short-window checkpoint fallback, unannounced fail-stop, final stream
-commit); ``--check`` exits nonzero unless the scheduler replayed >= 5
-events with zero ``aborted`` outcomes, at least one resize was served
-warm from the pool, and warm prepare beat cold by >= 5x. The full mode
+too-short-window checkpoint fallback, unannounced fail-stop, stream
+commit, tp-preserving shrink that classifies fully resident); ``--check``
+exits nonzero unless the scheduler replayed >= 5 events with zero
+``aborted`` outcomes, at least one resize was served warm from the pool,
+warm prepare beat cold by >= 5x, and at least one record reports
+``reused_layers > 0`` (the delta plan IR skipped in-place layers). The
+full mode
 replays a seeded ``spot_trace`` with live deadline decisions. Results
 land in ``results/BENCH_goodput.json``.
 """
@@ -62,7 +65,9 @@ if SMOKE:
     # fixed trace covering the whole fallback lattice, deterministic
     # decisions (windows at the extremes), deterministic replay
     # (sync_prepare): stream commit, mid-prepare retarget, coalesce,
-    # zero-window checkpoint fallback, unannounced fail-stop, final commit
+    # zero-window checkpoint fallback, unannounced fail-stop, stream
+    # commit, and a final tp-preserving shrink whose plan classifies
+    # fully resident (delta IR: layer reuse, near-zero bytes moved)
     events = [
         ResizeEvent(time_s=0.5, target=ParallelConfig(dp=2, tp=4), warning_s=BIG),
         ResizeEvent(time_s=0.6, target=ParallelConfig(dp=1, tp=4), warning_s=BIG),
@@ -70,6 +75,7 @@ if SMOKE:
         ResizeEvent(time_s=10.0, target=ParallelConfig(dp=2, tp=2), warning_s=0.0),
         FailStopEvent(time_s=18.0, target=ParallelConfig(dp=1, tp=2)),
         ResizeEvent(time_s=24.0, target=ParallelConfig(dp=2, tp=2), warning_s=BIG),
+        ResizeEvent(time_s=30.0, target=ParallelConfig(dp=1, tp=2), warning_s=BIG),
     ]
     time_scale, sync_prepare = 1.0, True
 else:
@@ -123,6 +129,9 @@ doc["measured"] = {
     "reconfig_records": [
         {"src": r.src, "dst": r.dst, "mode": r.mode, "outcome": r.outcome,
          "pause_s": r.total_pause_s, "reused_layers": r.reused_layers,
+         "resident_layers": r.resident_layers,
+         "skipped_bytes": r.skipped_bytes,
+         "moved_bytes": r.plan_network_bytes + r.plan_local_bytes,
          "warm_hit": r.warm_hit, "prepare_s": r.prepare_s,
          "prepare_source": r.prepare_source}
         for r in ctrl.records
@@ -208,6 +217,13 @@ def main(argv=()) -> None:
         if wc["speedup"] is not None and wc["speedup"] < 5.0:
             raise SystemExit(
                 f"warm prepare not >=5x faster than cold: {wc}"
+            )
+        # delta plan IR gate: the tp-preserving shrink in the trace must
+        # classify its layers resident and skip them
+        recs = meas["reconfig_records"]
+        if not any(r["reused_layers"] > 0 for r in recs):
+            raise SystemExit(
+                "no record reused layers: delta classification never fired"
             )
 
 

@@ -25,6 +25,7 @@ BENCHES = [
     ("movefrac", "benchmarks.bench_move_fraction"),
     ("roofline", "benchmarks.bench_roofline"),
     ("dataplane", "benchmarks.bench_dataplane"),
+    ("delta", "benchmarks.bench_delta"),
     ("goodput", "benchmarks.bench_goodput"),
 ]
 

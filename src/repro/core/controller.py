@@ -45,6 +45,7 @@ from repro.core.shadow import (
     build_train_world,
     build_update_world_fn,
 )
+from repro.core.records import ReuseRecordMixin
 from repro.core.world_pool import WorldPool
 from repro.data import SyntheticLM
 from repro.optim import AdamWConfig
@@ -53,7 +54,9 @@ from repro.utils.pytree import tree_paths
 
 
 @dataclass
-class ReconfigRecord:
+class ReconfigRecord(ReuseRecordMixin):
+    # reused_layers / resident_layers / skipped_bytes come from the shared
+    # ReuseRecordMixin (classified plan IR, DESIGN.md §13)
     gen_id: int
     src: str
     dst: str
@@ -72,8 +75,6 @@ class ReconfigRecord:
     #                deadline pressure, or checkpoint restore)
     #   aborted    — abandoned without completing
     outcome: str = "committed"
-    # layers inherited from a superseded session at retarget
-    reused_layers: int = 0
     # Prepare served from the warm world pool (or residual shadow work):
     # lower+compile skipped entirely. The DeadlineEstimator keeps separate
     # warm/cold prepare estimates keyed on this flag.
@@ -516,7 +517,10 @@ class LiveRController:
             # IS the pre-copy work it wasted
             rec.precopy_s = rep.precopy_seconds
             rec.precopy_bytes = rep.precopy_bytes
-            rec.reused_layers = reused
+            # max, not overwrite: the stop-copy commit already counted the
+            # plan's resident layers; the session's figure additionally
+            # includes layers adopted at retarget
+            rec.reused_layers = max(rec.reused_layers, reused)
         return rec
 
     # ------------------------------------------------------------------
@@ -685,9 +689,11 @@ class LiveRController:
         if self._reuse is not None:
             old_targets, old_carries, old_streamed_at = self._reuse
             self._reuse = None
-            self._pending_rec.reused_layers = self._session.adopt(
-                old_carries, old_targets, old_streamed_at
-            )
+            self._session.adopt(old_carries, old_targets, old_streamed_at)
+        # the session's figure already counts the plan's resident layers
+        # (never streamed) plus anything adopted above
+        self._pending_rec.reused_layers = self._session.report.reused_layers
+        self._pending_rec.resident_layers = self._session.report.resident_layers
         if self.sync_compile and self.world.grad_fn is None:
             self.world.grad_fn = self._compile_grad_fn(self.world)
         # grads-only executable for the OLD world: compiled in a background
@@ -741,6 +747,8 @@ class LiveRController:
             plan_network_bytes=plan.network_bytes,
             plan_local_bytes=plan.local_bytes,
             layers_total=len(plan.layers()),
+            reused_layers=len(plan.resident_layers()),
+            resident_layers=len(plan.resident_layers()),
             plan_s=self._plan_seconds,
             warm_hit=bool(new_world.timings.get("warm_hit", False)),
             prepare_source=new_world.timings.get("prepare_source", "cold"),
@@ -775,6 +783,7 @@ class LiveRController:
         rec.moved_bytes = (
             stats.network_bytes + stats.local_bytes + rep_x.moved_bytes
         )
+        rec.skipped_bytes = stats.resident_bytes
         rec.executed_bytes = stats.executed_bytes + rep_x.moved_bytes
         rec.stream_dispatch_s = stats.dispatch_seconds
         rec.stream_drain_s = stats.drain_seconds
@@ -899,6 +908,9 @@ class LiveRController:
         rec.generic_cells = session.stats.generic_cells + g_stats.generic_cells
         rec.dirty_layers = rep.resync_layers
         rec.layers_total = len(plan.layers())
+        rec.reused_layers = rep.reused_layers
+        rec.resident_layers = rep.resident_layers
+        rec.skipped_bytes = rep.skipped_bytes + g_stats.resident_bytes
         rec.plan_network_bytes = plan.network_bytes
         rec.plan_local_bytes = plan.local_bytes
         rec.moved_bytes = rep.total_bytes + g_stats.network_bytes + g_stats.local_bytes

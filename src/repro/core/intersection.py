@@ -51,10 +51,21 @@ class TransferTask:
     dst_offset: tuple[int, ...]  # region origin within the destination shard
     nbytes: int
     layer: int  # streaming group (global layer id; -1 = non-layer state)
+    # cell class (DESIGN.md §13):
+    #   "resident" — src shard == dst shard on the same device: a no-op
+    #   "local"    — same device, different layout: on-device relayout
+    #   "remote"   — genuine cross-device transfer
+    # The default keeps hand-built synthetic tasks (plan-less live_reshard,
+    # test fixtures) on the conservative full-transfer path.
+    kind: str = "remote"
 
     @property
     def local(self) -> bool:
         return self.src_rank == self.dst_rank
+
+    @property
+    def resident(self) -> bool:
+        return self.kind == "resident"
 
     def shape(self) -> tuple[int, ...]:
         return tuple(h - l for l, h in self.bounds)
@@ -68,14 +79,31 @@ class TransferPlan:
 
     @property
     def network_bytes(self) -> int:
-        return sum(t.nbytes for t in self.tasks if not t.local)
+        return sum(t.nbytes for t in self.tasks if t.kind == "remote")
 
     @property
     def local_bytes(self) -> int:
-        return sum(t.nbytes for t in self.tasks if t.local)
+        """On-device relayout bytes — excludes resident (in-place) cells."""
+        return sum(t.nbytes for t in self.tasks if t.kind == "local")
+
+    @property
+    def resident_bytes(self) -> int:
+        """Bytes already in place on the right device: never moved."""
+        return sum(t.nbytes for t in self.tasks if t.kind == "resident")
+
+    def kind_bytes(self) -> dict[str, int]:
+        out = {"resident": 0, "local": 0, "remote": 0}
+        for t in self.tasks:
+            out[t.kind] = out.get(t.kind, 0) + t.nbytes
+        return out
 
     def layers(self) -> list[int]:
         return sorted({t.layer for t in self.tasks})
+
+    def resident_layers(self) -> list[int]:
+        """Layers whose every cell is resident: nothing to stream at all."""
+        moved = {t.layer for t in self.tasks if t.kind != "resident"}
+        return sorted({t.layer for t in self.tasks} - moved)
 
     def by_layer(self, layer: int) -> list[TransferTask]:
         return [t for t in self.tasks if t.layer == layer]
@@ -262,6 +290,17 @@ def _emit_cell(
     layer = -1
     if ldim is not None:
         layer = _layer_id(spec, bounds[ldim][0], num_positions)
+    # Classification (DESIGN.md §13). Under the prefix device allocation rank
+    # r maps to devices[r] in both configs, so src_rank == dst_rank means the
+    # same physical device. "resident" additionally requires the whole shard
+    # view to be identical — then the cell's bytes sit at the same place in
+    # the same buffer layout and nothing needs to happen.
+    if src_rank != dst_rank:
+        kind = "remote"
+    elif v_src.bounds == v_dst.bounds:
+        kind = "resident"
+    else:
+        kind = "local"
     tasks.append(
         TransferTask(
             tensor=spec.name,
@@ -273,6 +312,7 @@ def _emit_cell(
             dst_offset=tuple(b[0] - v[0] for b, v in zip(bounds, v_dst.bounds)),
             nbytes=nbytes,
             layer=layer,
+            kind=kind,
         )
     )
 

@@ -1,0 +1,23 @@
+"""Shared record fields for the classified plan IR (DESIGN.md §13).
+
+``ReconfigRecord`` (controller), ``OverlapReport`` (session), and
+``EventOutcome`` (trace scheduler) all surface the same reuse accounting;
+before this mixin each re-declared ``reused_layers`` independently and the
+definitions drifted. ``kw_only`` keeps the inheriting dataclasses free to
+declare required positional fields of their own.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass
+class ReuseRecordMixin:
+    # layers whose bytes were NOT re-streamed: resident layers plus layers
+    # adopted from a prior in-flight session on retarget
+    reused_layers: int = field(default=0, kw_only=True)
+    # layers fully resident under the classified plan (subset of reused)
+    resident_layers: int = field(default=0, kw_only=True)
+    # plan bytes that never crossed a wire because they were already in place
+    skipped_bytes: int = field(default=0, kw_only=True)

@@ -20,9 +20,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.configs.base import ParallelConfig
-from repro.core.intersection import TransferPlan, TransferTask
+from repro.core.intersection import TransferPlan
 from repro.core.resource_view import TensorSpec, view_of
-from repro.reshard.chunking import chunk_task as _chunk_task  # legacy name
 from repro.reshard.engine import (
     DEFAULT_STAGING_BYTES,
     ReshardEngine,
@@ -37,7 +36,6 @@ __all__ = [
     "allocate_destination",
     "execute_plan",
     "materialize_rank",
-    "_chunk_task",
 ]
 
 

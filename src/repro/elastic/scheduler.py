@@ -33,6 +33,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
 from repro.core.events import FailStopEvent, ResizeEvent, sort_trace
+from repro.core.records import ReuseRecordMixin
 
 
 # ---------------------------------------------------------------------------
@@ -187,7 +188,13 @@ class DeadlineEstimator:
 
     # -- the estimate ---------------------------------------------------
     def _plan_for(self, target) -> tuple[int, int]:
-        """(plan bytes, plan layers) for current-world -> target."""
+        """(plan bytes, plan layers) for current-world -> target.
+
+        Priced on the classified plan IR (DESIGN.md §13): bytes are REMOTE
+        only — resident cells never move and local relayouts never cross a
+        wire — and fully-resident layers need no pre-copy rounds. This is
+        what lets a tp-preserving resize fit the overlap rung inside a
+        warning window its full-copy byte count would have blown."""
         b = getattr(self.ctrl, "_builder", None)
         if b is not None and b.ready and not b.abandoned:
             handle = b.result()
@@ -198,14 +205,18 @@ class DeadlineEstimator:
                 and bundle[0] == self.ctrl.world.parallel
             ):
                 plan = bundle[2]
-                return plan.network_bytes + plan.local_bytes, len(plan.layers())
+                return plan.network_bytes, len(plan.layers()) - len(
+                    plan.resident_layers()
+                )
         from repro.core.reshard import plan_state_transfer
 
         _, plan = plan_state_transfer(
             self.ctrl.cfg, self.ctrl.world.parallel, target,
             source_policy=self.ctrl.source_policy,
         )
-        return plan.network_bytes + plan.local_bytes, len(plan.layers())
+        return plan.network_bytes, len(plan.layers()) - len(
+            plan.resident_layers()
+        )
 
     def _pool_warm(self, target) -> bool:
         """True when the controller's warm pool holds a ready world for
@@ -318,7 +329,9 @@ class PrefetchPolicy:
 
 
 @dataclass
-class EventOutcome:
+class EventOutcome(ReuseRecordMixin):
+    # reused_layers / resident_layers / skipped_bytes come from the shared
+    # ReuseRecordMixin (classified plan IR, DESIGN.md §13)
     index: int
     kind: str  # resize | fail_stop
     time_s: float
@@ -332,7 +345,6 @@ class EventOutcome:
     est_stop_copy_total_s: float = 0.0
     commit_clock_s: float = -1.0
     met_deadline: Optional[bool] = None
-    reused_layers: int = 0
     pause_s: float = 0.0
 
     def to_dict(self) -> dict:
@@ -484,6 +496,8 @@ class ElasticScheduler:
                 o.commit_clock_s = self.clock
                 o.met_deadline = self.clock <= p.deadline
                 o.reused_layers = rec.reused_layers
+                o.resident_layers = rec.resident_layers
+                o.skipped_bytes = rec.skipped_bytes
                 o.pause_s = rec.total_pause_s
                 self._pending = None
 

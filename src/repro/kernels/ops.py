@@ -20,6 +20,7 @@ from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.reshard_pack import (
     pack_rows_pallas,
+    relayout_rows_pallas,
     scatter_rows_pallas,
     unpack_rows_pallas,
 )
@@ -171,6 +172,29 @@ def unpack_rows(buf, row_starts, block_rows: int, out_rows: int):
         )
     return _ref.unpack_rows_ref(
         buf, jnp.asarray(row_starts, jnp.int32), block_rows, out_rows
+    )
+
+
+def relayout_rows(dst, src, row_starts, block_rows: int):
+    """On-device relayout for the classified plan IR's "local" cells: copy
+    row blocks of ``src`` into ``dst`` (treated as donated) at the same
+    global offsets, in one fused gather→scatter with no staging buffer.
+    Rows not named by ``row_starts`` keep their existing bytes; duplicate
+    starts resolve last-wins on both paths."""
+    use, interp = _use_pallas()
+    aligned = (
+        dst.shape[0] % block_rows == 0
+        and src.shape[0] % block_rows == 0
+        and dst.shape[1] % 128 == 0
+        and src.shape[1] == dst.shape[1]
+        and _starts_aligned(row_starts, block_rows)
+    )
+    if use and aligned:
+        return relayout_rows_pallas(
+            dst, src, jnp.asarray(row_starts, jnp.int32), block_rows, interpret=interp
+        )
+    return _ref.relayout_rows_ref(
+        dst, src, jnp.asarray(row_starts, jnp.int32), block_rows
     )
 
 

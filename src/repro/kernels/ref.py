@@ -177,6 +177,30 @@ def unpack_rows_ref(
     return jax.lax.fori_loop(0, nb, body, out)
 
 
+def relayout_rows_ref(
+    dst: jax.Array, src: jax.Array, row_starts: jax.Array, block_rows: int
+) -> jax.Array:
+    """On-device relayout: gather blocks of ``src`` at ``row_starts`` and
+    overwrite-scatter them into ``dst`` at the SAME row offsets (both arrays
+    are global views of one tensor; "local" plan cells move bytes between
+    two layouts of the same global coordinates). Composition of
+    ``pack_rows_ref`` and ``scatter_rows_ref`` with a shared offset table;
+    duplicate starts resolve last-wins like the scatter."""
+    nb = row_starts.shape[0]
+
+    def take(start):
+        return jax.lax.dynamic_slice_in_dim(src, start, block_rows, axis=0)
+
+    blocks = jax.vmap(take)(row_starts)  # (nb, block_rows, C)
+
+    def body(i, acc):
+        return jax.lax.dynamic_update_slice_in_dim(
+            acc, blocks[i], row_starts[i], axis=0
+        )
+
+    return jax.lax.fori_loop(0, nb, body, dst)
+
+
 def scatter_rows_ref(
     dst: jax.Array, buf: jax.Array, row_starts: jax.Array, block_rows: int
 ) -> jax.Array:

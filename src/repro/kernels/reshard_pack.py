@@ -100,6 +100,47 @@ def unpack_rows_pallas(
     )(row_starts, buf)
 
 
+def relayout_rows_pallas(
+    dst: jax.Array,  # (R, C) — donated; aliased into the output
+    src: jax.Array,  # (R, C) — same global shape, different layout
+    row_starts: jax.Array,  # (nb,) int32
+    block_rows: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused gather→scatter for the classified plan IR's "local" cells: copy
+    blocks of ``src`` into ``dst`` at the same row offsets in ONE kernel —
+    the pack and scatter index maps composed, with no intermediate staging
+    buffer and no second HBM round trip. ``dst`` is aliased to the output
+    (``input_output_aliases``) so untouched blocks keep their bytes and
+    re-applying is idempotent, exactly like ``scatter_rows``."""
+    nb = row_starts.shape[0]
+    C = dst.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(
+                (block_rows, C), lambda i, starts: (starts[i] // block_rows, 0)
+            ),
+            pl.BlockSpec(
+                (block_rows, C), lambda i, starts: (starts[i] // block_rows, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_rows, C), lambda i, starts: (starts[i] // block_rows, 0)
+        ),
+    )
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        # flattened input index 2 (starts, src, dst) -> output 0
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(row_starts, src, dst)
+
+
 def _scatter_kernel(starts_ref, buf_ref, dst_ref, o_ref):
     del starts_ref, dst_ref  # starts: index maps; dst: aliased into the output
     o_ref[...] = buf_ref[...]

@@ -63,6 +63,7 @@ def chunk_task(task: TransferTask, budget: int) -> list[TransferTask]:
                 ),
                 nbytes=task.nbytes * (end - start) // shape[d],
                 layer=task.layer,
+                kind=task.kind,
             )
         )
     return out

@@ -13,6 +13,7 @@ benchmarks report.
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import Iterable, Optional, Protocol
@@ -28,6 +29,10 @@ class StreamStats:
     layers_streamed: int = 0
     network_bytes: int = 0
     local_bytes: int = 0
+    # bytes whose cells were classified resident: already in place on the
+    # right device, counted here and moved nowhere (DESIGN.md §13)
+    resident_bytes: int = 0
+    resident_cells: int = 0
     peak_staging_bytes: int = 0
     barriers: int = 0
     chunks: int = 0
@@ -56,6 +61,8 @@ class StreamStats:
         self.layers_streamed += other.layers_streamed
         self.network_bytes += other.network_bytes
         self.local_bytes += other.local_bytes
+        self.resident_bytes += other.resident_bytes
+        self.resident_cells += other.resident_cells
         self.peak_staging_bytes = max(
             self.peak_staging_bytes, other.peak_staging_bytes
         )
@@ -93,11 +100,15 @@ class ReshardEngine:
         executor,
         staging_bytes: int = DEFAULT_STAGING_BYTES,
         zero_copy_local: bool = True,
+        delta: bool = True,
     ):
         self.plan = plan
         self.executor = executor
         self.staging_bytes = staging_bytes
         self.zero_copy_local = zero_copy_local
+        # delta=False demotes resident cells to the pre-classification local
+        # path — the full-copy baseline benchmarks compare against
+        self.delta = delta
 
     def layers(self) -> list[int]:
         return self.plan.layers()
@@ -153,6 +164,16 @@ class ReshardEngine:
         for dst_rank, dtasks in by_dst.items():
             staging_used = 0
             for task in dtasks:
+                if task.resident:
+                    if self.delta:
+                        # bytes already in place: account, never chunk/move
+                        self.executor.apply(task)
+                        stats.resident_bytes += task.nbytes
+                        stats.resident_cells += 1
+                        continue
+                    # full-copy baseline: demote to the pre-classification
+                    # local path so the executor physically moves the bytes
+                    task = dataclasses.replace(task, kind="local")
                 if task.local and self.zero_copy_local:
                     self.executor.apply(task)
                     stats.local_bytes += task.nbytes

@@ -77,7 +77,12 @@ class SimExecutor:
         ssl = tuple(slice(o, o + s) for o, s in zip(task.src_offset, shape))
         dsl = tuple(slice(o, o + s) for o, s in zip(task.dst_offset, shape))
         dst.shards[task.tensor][dsl] = src.shards[task.tensor][ssl]
-        self.executed_bytes += task.nbytes
+        # resident cells are already in place on the real device — the sim
+        # still performs the copy (its per-rank stores are distinct buffers,
+        # and the oracle must produce complete destination shards) but the
+        # byte oracle counts them as zero moved bytes (DESIGN.md §13)
+        if not task.resident:
+            self.executed_bytes += task.nbytes
 
     def end_layer(self, layer: int) -> None:
         pass
@@ -96,6 +101,8 @@ class SimExecutor:
 # mesh (and its executables) for process lifetime.
 _ZEROS_CACHE: dict = {}
 _SCATTER_CACHE: dict = {}
+_RELAYOUT_CACHE: dict = {}
+_RELAYOUT_ND_CACHE: dict = {}
 _JIT_CACHE_MAX = 64
 
 
@@ -199,6 +206,69 @@ def _scatter_fn(sharding):
     return fn
 
 
+def _relayout_fn(sharding):
+    """Jitted fused on-device relayout for "local" plan cells: gather the
+    named rows from the SOURCE leaf and overwrite-scatter them into the
+    donated destination carry at the same global offsets — one compiled
+    program, no staging buffer, no cross-mesh device_put hop. Legal only
+    when source and target meshes flatten to the same device assignment
+    (the caller guards via ``_same_device_assignment``)."""
+    fn = _RELAYOUT_CACHE.get(sharding)
+    if fn is None:
+        import jax
+
+        def f(carry, leaf, starts):
+            from repro.kernels import ops
+
+            c2 = carry.reshape(carry.shape[0], -1)
+            l2 = leaf.reshape(leaf.shape[0], -1)
+            c2 = ops.relayout_rows(c2, l2, starts, 1)
+            return c2.reshape(carry.shape)
+
+        fn = _cache_put(
+            _RELAYOUT_CACHE,
+            sharding,
+            jax.jit(f, donate_argnums=(0,), out_shardings=sharding),
+        )
+    return fn
+
+
+def _relayout_nd_fn(sharding, chunk_shape: tuple[int, ...]):
+    """Jitted fused slice+update for a "local" cell that does not decompose
+    into full-width rows: dynamic_slice the SOURCE leaf at the cell's global
+    origin and dynamic_update_slice it into the donated carry at the same
+    origin — one program instead of the slice/device_put/DUS chain."""
+    key = (sharding, chunk_shape)
+    fn = _RELAYOUT_ND_CACHE.get(key)
+    if fn is None:
+        import jax
+
+        def f(carry, leaf, starts):
+            idx = tuple(starts[i] for i in range(carry.ndim))
+            chunk = jax.lax.dynamic_slice(leaf, idx, chunk_shape)
+            return jax.lax.dynamic_update_slice(carry, chunk, idx)
+
+        fn = _cache_put(
+            _RELAYOUT_ND_CACHE,
+            key,
+            jax.jit(f, donate_argnums=(0,), out_shardings=sharding),
+        )
+    return fn
+
+
+def _same_device_assignment(sh_a, sh_b) -> bool:
+    """True when two NamedShardings flatten to the identical ordered device
+    list — the precondition for putting both arrays through one jitted
+    program (jax rejects mixed device assignments)."""
+    from jax.sharding import NamedSharding
+
+    if not isinstance(sh_a, NamedSharding) or not isinstance(sh_b, NamedSharding):
+        return False
+    a = sh_a.mesh.devices.ravel().tolist()
+    b = sh_b.mesh.devices.ravel().tolist()
+    return len(a) == len(b) and all(x is y for x, y in zip(a, b))
+
+
 class LiveExecutor:
     """Execute plan regions on live jax.Arrays.
 
@@ -236,8 +306,14 @@ class LiveExecutor:
         # clock; the engine subtracts its delta from the loop time so
         # dispatch_seconds stays pure dispatch
         self.stage_wait_seconds = 0.0
-        self._seen: set[tuple] = set()
-        self._cells: dict[str, list[TransferTask]] = {}
+        # count of resident pass-through refreshes (tests/benchmarks)
+        self.resident_passthroughs = 0
+        # replica-dedupe: region key -> strongest kind seen ("resident" is
+        # upgraded in place if another dst rank genuinely needs the bytes)
+        self._seen: dict[tuple, str] = {}
+        self._cells: dict[str, dict[tuple, TransferTask]] = {}
+        # tensors already refreshed via the resident pass-through this round
+        self._resident_done: set[str] = set()
         # async round tracking: staged buffers whose readiness implies this
         # round's source reads completed, and the dst names it touched
         self._round_staged: list[Any] = []
@@ -301,13 +377,18 @@ class LiveExecutor:
 
     def update_sources(self, src: dict[str, Any]) -> None:
         """Swap in fresh source leaves (the previous generation's arrays are
-        invalidated by step-function donation between streaming rounds)."""
+        invalidated by step-function donation between streaming rounds).
+        Resident destinations must re-alias the NEW leaves, so their
+        pass-through marks reset too."""
         self.src = src
+        self._resident_done = set()
 
     def reset_round(self) -> None:
         """Start a new streaming round: layers streamed before may be
-        re-streamed (dirty re-sync), so the replica-dedupe set resets."""
-        self._seen = set()
+        re-streamed (dirty re-sync), so the replica-dedupe set resets and
+        resident tensors are refreshed from the new cut."""
+        self._seen = {}
+        self._resident_done = set()
 
     # -- async round protocol -------------------------------------------
     def begin_round(self) -> None:
@@ -353,15 +434,45 @@ class LiveExecutor:
 
     def apply(self, chunk: TransferTask) -> None:
         key = (chunk.tensor, chunk.bounds)
-        if key in self._seen:  # replica fan-out: same bytes, other dst rank
+        prev = self._seen.get(key)
+        if prev is not None:  # replica fan-out: same bytes, other dst rank
+            if prev == "resident" and chunk.kind != "resident":
+                # the region first showed up as resident, but this replica
+                # lands on a device that does NOT already hold it — one
+                # move on the global array covers every destination device
+                # (including the resident one), so upgrade in place
+                self._seen[key] = chunk.kind
+                self._cells[chunk.tensor][chunk.bounds] = chunk
             return
-        self._seen.add(key)
-        self._cells.setdefault(chunk.tensor, []).append(chunk)
+        self._seen[key] = chunk.kind
+        self._cells.setdefault(chunk.tensor, {})[chunk.bounds] = chunk
 
     def end_layer(self, layer: int) -> None:
-        for name, cells in self._cells.items():
-            self._move_tensor(name, cells)
+        for name, regions in self._cells.items():
+            cells = list(regions.values())
+            if all(c.resident for c in cells):
+                # every byte of this tensor's layer is already on the right
+                # device: refresh the destination by aliasing the live
+                # source instead of streaming (DESIGN.md §13)
+                self._adopt_resident(name)
+            else:
+                self._move_tensor(name, cells)
         self._cells = {}
+
+    def _adopt_resident(self, name: str) -> None:
+        self._round_touched.add(name)
+        if name in self._resident_done:
+            return
+        self._resident_done.add(name)
+        # a same-layout device_put aliases per-device buffers where the
+        # target already holds the bytes — near-free, and exactly why the
+        # sources of a resident destination must never be force-freed
+        self.dst[name] = self._jax.device_put(
+            self.src[name], self.target_shardings[name]
+        )
+        self._no_release.add(name)
+        self._stage(self.dst[name])
+        self.resident_passthroughs += 1
 
     # -- movement -------------------------------------------------------
     def _dst_carry(self, name: str):
@@ -387,19 +498,78 @@ class LiveExecutor:
             self._no_release.add(name)
             self.executed_bytes += spec.nbytes
             return
+        # classified routing: same-rank cells ("local" relayouts, plus the
+        # rare resident cell sharing a layer with moved regions) can take
+        # the fused on-device relayout — one program, no staging hop —
+        # when both meshes flatten to the same device assignment (a jitted
+        # program cannot span two device sets) AND splitting them off does
+        # not break the row-merge fast path for either partition.
+        here = [c for c in cells if c.kind in ("local", "resident")]
+        if here and self._relayout_ok(name):
+            rest = [c for c in cells if c.kind == "remote"]
+            rows_here = _full_rows(spec, here)
+            rows_rest = _full_rows(spec, rest) if rest else []
+            if rows_here is not None and rows_rest is not None:
+                self._relayout_rows(name, rows_here)
+                if not rest:
+                    return
+                cells = rest
+            elif _full_rows(spec, cells) is None:
+                # everything is generic either way: at least fuse the
+                # same-device cells into single-program relayouts
+                self.generic_cells += len(cells)
+                for c in here:
+                    self._relayout_cell(name, c)
+                for c in rest:
+                    self._move_cell(name, c)
+                return
+            # else: local+remote jointly tile full rows — the combined
+            # staged row path beats two per-partition generic paths
         # row-merge: do this layer's cells tile full-width rows of dim 0?
-        rows: set[int] = set()
-        for c in cells:
-            rows.update(range(c.bounds[0][0], c.bounds[0][1]))
-        per_row = spec.nbytes // spec.shape[0]
-        covered = sum(c.nbytes for c in cells)
-        if covered == per_row * len(rows):
-            self._move_rows(name, sorted(rows))
+        rows = _full_rows(spec, cells)
+        if rows is not None:
+            self._move_rows(name, rows)
         else:
             # partial-width cells (no full-row union): per-cell fallback
             self.generic_cells += len(cells)
             for c in cells:
                 self._move_cell(name, c)
+
+    # -- fused on-device relayout (classified "local" cells) ------------
+    def _relayout_ok(self, name: str) -> bool:
+        sh_src = getattr(self.src[name], "sharding", None)
+        return _same_device_assignment(sh_src, self.target_shardings[name])
+
+    def _relayout_rows(self, name: str, rows: list[int]) -> None:
+        jnp = self._jnp
+        spec = self.specs[name]
+        leaf = self.src[name]
+        per_row = spec.nbytes // spec.shape[0]
+        carry = self._dst_carry(name)
+        fn = _relayout_fn(self.target_shardings[name])
+        max_rows = rows_per_budget(per_row, self.staging_bytes)
+        for i in range(0, len(rows), max_rows):
+            batch = rows[i : i + max_rows]
+            starts = self._jax.device_put(
+                jnp.asarray(batch, jnp.int32), self._replicated_sh
+            )
+            carry = fn(carry, leaf, starts)
+            self.executed_bytes += per_row * len(batch)
+        self.dst[name] = carry
+        # the carry's readiness implies every source read of the relayout
+        # chain retired — that is what sync_staging promises callers
+        self._stage(carry)
+
+    def _relayout_cell(self, name: str, cell: TransferTask) -> None:
+        carry = self._dst_carry(name)
+        starts = self._jax.device_put(
+            self._jnp.asarray([lo for lo, _ in cell.bounds], self._jnp.int32),
+            self._replicated_sh,
+        )
+        fn = _relayout_nd_fn(self.target_shardings[name], cell.shape())
+        self.dst[name] = fn(carry, self.src[name], starts)
+        self._stage(self.dst[name])
+        self.executed_bytes += cell.nbytes
 
     def _move_rows(self, name: str, rows: list[int]) -> None:
         jnp, jax = self._jnp, self._jax
@@ -479,6 +649,19 @@ class LiveExecutor:
         self._round_staged = []
         for v in self.dst.values():
             v.block_until_ready()
+
+
+def _full_rows(spec, cells: list[TransferTask]) -> list[int] | None:
+    """The sorted dim-0 rows these cells tile at full width, or None if the
+    union does not decompose into complete rows (the generic-cell case)."""
+    rows: set[int] = set()
+    for c in cells:
+        rows.update(range(c.bounds[0][0], c.bounds[0][1]))
+    per_row = spec.nbytes // spec.shape[0]
+    covered = sum(c.nbytes for c in cells)
+    if covered == per_row * len(rows):
+        return sorted(rows)
+    return None
 
 
 def _runs(sorted_rows: list[int]) -> list[tuple[int, int]]:

@@ -38,6 +38,7 @@ from dataclasses import dataclass, field
 from typing import Any, Optional
 
 from repro.core.intersection import TransferPlan
+from repro.core.records import ReuseRecordMixin
 from repro.core.resource_view import TensorSpec
 from repro.reshard.engine import ReshardEngine, StreamStats
 from repro.reshard.executors import LiveExecutor
@@ -59,15 +60,16 @@ def _layout_agrees(sh_old, sh_new, shape: tuple) -> bool:
 
 
 @dataclass
-class OverlapReport:
+class OverlapReport(ReuseRecordMixin):
+    # reused_layers / resident_layers / skipped_bytes come from the shared
+    # ReuseRecordMixin: resident layers never stream; adopt() adds layers
+    # inherited from a superseded session at retarget
     precopy_rounds: int = 0
     precopy_bytes: int = 0
     precopy_seconds: float = 0.0
     resync_layers: int = 0
     resync_bytes: int = 0
     resync_seconds: float = 0.0
-    # layers inherited from a superseded session at retarget (adopt())
-    reused_layers: int = 0
     # dispatch-vs-drain attribution across all rounds (pre-copy + re-sync):
     # dispatch = host time issuing device programs, drain = blocking waits
     # (staging syncs, double-buffer backpressure, final commit drain)
@@ -102,10 +104,22 @@ class OverlapSession:
         self.engine = ReshardEngine(plan, self.executor, staging_bytes)
         self.stream_k = max(1, stream_k)
         self.max_inflight_rounds = max(1, max_inflight_rounds)
-        self.pending: list[int] = self.engine.layers()
+        # fully-resident layers never enter the pre-copy schedule: their
+        # bytes are already in place and the commit-time resync refreshes
+        # them from the final cut with a near-free aliasing pass-through
+        # (re-classification, not a re-stream — DESIGN.md §13)
+        resident = set(plan.resident_layers())
+        self.resident_layers: list[int] = sorted(
+            l for l in self.engine.layers() if l in resident
+        )
+        self.pending: list[int] = [
+            l for l in self.engine.layers() if l not in resident
+        ]
         self.streamed_at: dict[int, int] = {}
         self.stats = StreamStats()
         self.report = OverlapReport()
+        self.report.resident_layers = len(self.resident_layers)
+        self.report.reused_layers = len(self.resident_layers)
         # rounds whose destination writes may still be in flight: each
         # entry is the set of tensor names the round touched
         self._inflight: list[set[str]] = []
@@ -181,7 +195,8 @@ class OverlapSession:
         for l in reused:
             self.pending.remove(l)
             self.streamed_at[l] = streamed_at[l]
-        self.report.reused_layers = len(reused)
+        # += : resident layers were already counted as reused at __init__
+        self.report.reused_layers += len(reused)
         return len(reused)
 
     def dirty_layers(self, step: int) -> list[int]:
@@ -244,6 +259,7 @@ class OverlapSession:
             self.streamed_at[l] = step
         self.report.precopy_rounds += 1
         self.report.precopy_bytes += s.network_bytes + s.local_bytes
+        self.report.skipped_bytes += s.resident_bytes
         self.report.precopy_seconds += dispatch_dt + drain_dt
         # the engine self-reports pure dispatch; staging backpressure hit
         # inside its loop belongs on the drain side
@@ -263,7 +279,14 @@ class OverlapSession:
         frees the sources) happens — the caller overlaps the scatter drain
         with other work and must call :meth:`drain` before consuming
         :meth:`results`."""
-        layers = sorted(set(self.dirty_layers(step)) | set(self.pending))
+        # resident layers join every resync: their refresh is a re-classify
+        # (an aliasing pass-through from the step-``step`` cut), never a
+        # byte re-stream — even when the optimizer dirtied them
+        layers = sorted(
+            set(self.dirty_layers(step))
+            | set(self.pending)
+            | set(self.resident_layers)
+        )
         self.pending = []
         self.executor.update_sources(src_leaves)
         self.executor.reset_round()
@@ -283,6 +306,7 @@ class OverlapSession:
             self.streamed_at[l] = step
         self.report.resync_layers += len(layers)
         self.report.resync_bytes += s.network_bytes + s.local_bytes
+        self.report.skipped_bytes += s.resident_bytes
         self.report.resync_seconds += dispatch_dt + drain_dt
         self.report.dispatch_seconds += s.dispatch_seconds
         self.report.drain_seconds += drain_dt + max(

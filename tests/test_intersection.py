@@ -104,12 +104,78 @@ def test_split_bounds_partition(size, parts):
     assert total == size
 
 
-def test_identity_plan_is_all_local():
+def test_identity_plan_is_all_resident():
     specs = _mk_specs(8, 12, 16)
     c = ParallelConfig(dp=2, pp=2, tp=2)
     plan = plan_transfer(specs, c, c, source_policy="nearest")
     assert plan.network_bytes == 0
-    assert plan.local_bytes > 0
+    assert plan.local_bytes == 0
+    assert plan.resident_bytes > 0
+    assert all(t.kind == "resident" for t in plan.tasks)
+    assert plan.resident_layers() == plan.layers()
+
+
+def test_classification_tp_preserving_shrink_is_all_resident():
+    """dp2tp2 -> dp1tp2: every surviving rank keeps an identical shard —
+    the whole plan classifies resident and the delta executor moves zero
+    bytes."""
+    specs = [
+        TensorSpec("params/w", (16, 16), "float32", ("tp", "none"), "stages", "params")
+    ]
+    plan = plan_transfer(
+        specs, ParallelConfig(dp=2, tp=2), ParallelConfig(dp=1, tp=2),
+        source_policy="nearest",
+    )
+    assert {t.kind for t in plan.tasks} == {"resident"}
+    assert plan.network_bytes == 0
+    assert plan.local_bytes == 0
+    assert plan.resident_bytes == sum(t.nbytes for t in plan.tasks)
+    assert plan.resident_layers() == plan.layers()
+
+
+def test_classification_dp_grow_is_resident_plus_remote():
+    """dp1tp2 -> dp2tp2: surviving ranks are resident; the new replica
+    group receives remote broadcasts — no local relayout anywhere."""
+    specs = [
+        TensorSpec("params/w", (16, 16), "float32", ("tp", "none"), "stages", "params")
+    ]
+    plan = plan_transfer(
+        specs, ParallelConfig(dp=1, tp=2), ParallelConfig(dp=2, tp=2),
+        source_policy="nearest",
+    )
+    kinds = {t.dst_rank: t.kind for t in plan.tasks}
+    by_kind = plan.kind_bytes()
+    assert by_kind["local"] == 0
+    assert by_kind["resident"] > 0
+    assert by_kind["remote"] > 0
+    # exactly the src-world ranks are resident; the grown ranks are remote
+    resident_ranks = {r for r, k in kinds.items() if k == "resident"}
+    remote_ranks = {r for r, k in kinds.items() if k == "remote"}
+    assert resident_ranks | remote_ranks == set(range(4))
+    assert len(resident_ranks) == 2
+    assert len(remote_ranks) == 2
+
+
+def test_classification_tp_change_is_local_plus_remote_no_resident():
+    """dp2tp2 -> dp1tp4: tp width changes, so no shard survives verbatim —
+    same-rank overlaps classify local (on-device relayout), the rest
+    remote. Never resident."""
+    specs = [
+        TensorSpec("params/w", (16, 16), "float32", ("tp", "none"), "stages", "params")
+    ]
+    plan = plan_transfer(
+        specs, ParallelConfig(dp=2, tp=2), ParallelConfig(dp=1, tp=4),
+        source_policy="nearest",
+    )
+    assert plan.resident_bytes == 0
+    kinds = {t.kind for t in plan.tasks}
+    assert kinds == {"local", "remote"}
+    for t in plan.tasks:
+        if t.kind == "local":
+            assert t.src_rank == t.dst_rank
+        else:
+            assert t.src_rank != t.dst_rank
+    assert plan.resident_layers() == []
 
 
 def test_dp_increase_is_broadcast():

@@ -86,6 +86,7 @@ for name, ca, cb in TRANSITIONS:
     # identical engine-side accounting from both backends
     assert live_stats.network_bytes == sim_stats.network_bytes, name
     assert live_stats.local_bytes == sim_stats.local_bytes, name
+    assert live_stats.resident_bytes == sim_stats.resident_bytes, name
     assert live_stats.layers_streamed == sim_stats.layers_streamed, name
     live_stats.assert_bounded(2048)
     # byte-identical destination shards on every target rank
@@ -121,6 +122,111 @@ def test_stream_stats_surface_dispatch_drain_and_generic_cells():
     assert a.dispatch_seconds == 1.0
     assert a.drain_seconds == 1.5
     assert a.generic_cells == 5
+
+
+def test_resident_skip_parity_and_dirty_reclassify(subproc):
+    """Delta-aware plan IR (DESIGN.md §13): a tp-preserving shrink classifies
+    fully resident — the live executor must move ZERO bytes (aliasing
+    pass-throughs only) yet stay bitwise-identical to the SimExecutor
+    oracle; dirtying the sources and re-syncing must refresh from the new
+    cut still without streaming (re-classify, not re-stream); and the
+    delta=False baseline must physically move every byte."""
+    out = subproc(
+        """
+        import numpy as np, jax, jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs.base import ParallelConfig
+        from repro.core.intersection import plan_transfer
+        from repro.core.resource_view import TensorSpec, view_of
+        from repro.core.streaming import (
+            allocate_destination, execute_plan, materialize_rank)
+        from repro.distribution.sharding import make_elastic_mesh
+        from repro.reshard import LiveExecutor, OverlapSession, ReshardEngine
+
+        specs = [
+            TensorSpec("params/blocks/pos0/w", (8, 16, 32), "float32",
+                       ("pp", "none", "tp"), "stages", "params"),
+            TensorSpec("params/embed/tok", (64, 32), "float32",
+                       ("tp", "none"), "first", "params"),
+        ]
+        ca, cb = ParallelConfig(dp=2, tp=2), ParallelConfig(dp=1, tp=2)
+        plan = plan_transfer(specs, ca, cb, num_positions=1)
+        assert plan.network_bytes == 0 and plan.local_bytes == 0
+        assert plan.resident_bytes > 0
+        assert plan.resident_layers() == plan.layers()
+
+        rng = np.random.default_rng(0)
+        v0 = {s.name: rng.normal(size=s.shape).astype(s.dtype) for s in specs}
+        v1 = {k: v + 1.0 for k, v in v0.items()}  # optimizer stepped
+
+        # oracle
+        src = {r: materialize_rank(specs, ca, r, v0) for r in range(ca.world_size)}
+        dst = {r: allocate_destination(specs, cb, r) for r in range(cb.world_size)}
+        sim_stats = execute_plan(plan, src, dst, staging_bytes=2048)
+        assert sim_stats.resident_bytes == plan.resident_bytes
+        assert sim_stats.executed_bytes == 0  # oracle prices resident at zero
+
+        ROLE_AXIS = {"pp": "pipe", "tp": "model", "dp": "data", "none": None}
+        mesh_a, mesh_b = make_elastic_mesh(ca), make_elastic_mesh(cb)
+        def sharding_for(s, mesh):
+            return NamedSharding(mesh, P(*[ROLE_AXIS[r] for r in s.roles]))
+        def leaves(v):
+            return {s.name: jax.device_put(jnp.asarray(v[s.name]),
+                                           sharding_for(s, mesh_a))
+                    for s in specs}
+        targets = {s.name: sharding_for(s, mesh_b) for s in specs}
+
+        # live delta path: zero bytes moved, pass-throughs only
+        ex = LiveExecutor({s.name: s for s in specs}, leaves(v0), targets, 2048)
+        live_stats = ReshardEngine(plan, ex, staging_bytes=2048).run()
+        ex.block_until_ready()
+        assert live_stats.resident_bytes == sim_stats.resident_bytes
+        assert live_stats.executed_bytes == 0, live_stats.executed_bytes
+        assert ex.resident_passthroughs > 0
+        for s in specs:
+            got = np.asarray(jax.device_get(ex.results()[s.name]))
+            np.testing.assert_array_equal(got, v0[s.name])
+            for r in range(cb.world_size):
+                v = view_of(s, cb, r)
+                if v is None:
+                    continue
+                sl = tuple(slice(lo, hi) for lo, hi in v.bounds)
+                np.testing.assert_array_equal(got[sl], dst[r].shards[s.name])
+        print("RESIDENT_SKIP_PARITY_OK")
+
+        # dirty-resident re-classification through the overlap session:
+        # precopy is trivially done (no non-resident layers), the commit
+        # resync refreshes from the NEW cut, still moving zero bytes
+        sess = OverlapSession(specs, plan, {}, targets,
+                              staging_bytes=1 << 20, stream_k=3)
+        assert sess.done_precopy  # nothing to pre-copy: all resident
+        assert sess.report.reused_layers == len(plan.layers())
+        s1 = sess.resync(leaves(v1), step=1)
+        assert s1.executed_bytes == 0, s1.executed_bytes
+        assert s1.resident_bytes == plan.resident_bytes
+        assert sess.report.skipped_bytes >= plan.resident_bytes
+        for s in specs:
+            got = np.asarray(jax.device_get(sess.results()[s.name]))
+            np.testing.assert_array_equal(got, v1[s.name])  # new cut, not v0
+        print("DIRTY_RECLASSIFY_OK")
+
+        # full-copy baseline (delta=False): every byte physically moves
+        ex_b = LiveExecutor({s.name: s for s in specs}, leaves(v0), targets, 2048)
+        base = ReshardEngine(plan, ex_b, staging_bytes=2048, delta=False).run()
+        ex_b.block_until_ready()
+        assert base.resident_bytes == 0
+        assert base.local_bytes == plan.resident_bytes
+        assert ex_b.executed_bytes > 0
+        for s in specs:
+            got = np.asarray(jax.device_get(ex_b.results()[s.name]))
+            np.testing.assert_array_equal(got, v0[s.name])
+        print("BASELINE_MOVES_OK")
+        """,
+        n_devices=8,
+    )
+    assert "RESIDENT_SKIP_PARITY_OK" in out
+    assert "DIRTY_RECLASSIFY_OK" in out
+    assert "BASELINE_MOVES_OK" in out
 
 
 def test_scattered_restream_idempotent_vs_sim(subproc):

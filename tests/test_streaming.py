@@ -12,8 +12,8 @@ from repro.core.streaming import (
     allocate_destination,
     execute_plan,
     materialize_rank,
-    _chunk_task,
 )
+from repro.reshard.chunking import chunk_task
 from repro.core.resource_view import TensorSpec
 
 
@@ -66,7 +66,7 @@ def test_chunking_splits_oversized_tasks():
         bounds=((0, 64), (0, 32)), src_offset=(0, 0), dst_offset=(0, 0),
         nbytes=64 * 32 * 4, layer=0,
     )
-    chunks = _chunk_task(t, budget=32 * 4 * 8)  # 8 rows per chunk
+    chunks = chunk_task(t, budget=32 * 4 * 8)  # 8 rows per chunk
     assert len(chunks) == 8
     assert all(c.nbytes <= 32 * 4 * 8 for c in chunks)
     # chunks tile the task
