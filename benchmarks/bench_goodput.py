@@ -13,15 +13,24 @@ scheduler's prefetch policy (DESIGN.md §12): retired/abandoned/prefetched
 worlds serve later resizes warm, skipping lower+compile. The payload's
 ``measured.warm_cold`` section breaks prepare time down by warm vs cold.
 
-``--smoke`` replays a fixed 7-event trace exercising every rung of the
-fallback lattice (stream commit, mid-prepare retarget, coalesce,
+The controller runs with the compressed wire format (DESIGN.md §14:
+optimizer moments cross the wire int8-quantized); in smoke mode an
+emulated fixed-bandwidth interconnect plus one calibrated warning window
+make the lattice promote one event to the overlap rung *only because* of
+compression — its ``decision_lossless`` counterfactual lands on a lower
+rung.
+
+``--smoke`` replays a fixed 8-event trace exercising every rung of the
+fallback lattice (compression-promoted stream commit, retarget, coalesce,
 too-short-window checkpoint fallback, unannounced fail-stop, stream
 commit, tp-preserving shrink that classifies fully resident); ``--check``
 exits nonzero unless the scheduler replayed >= 5 events with zero
 ``aborted`` outcomes, at least one resize was served warm from the pool,
-warm prepare beat cold by >= 5x, and at least one record reports
-``reused_layers > 0`` (the delta plan IR skipped in-place layers). The
-full mode
+warm prepare beat cold by >= 5x, at least one record reports
+``reused_layers > 0`` (the delta plan IR skipped in-place layers), every
+record satisfies the cell-level reuse identity (``reuse_identity_ok``),
+and at least one committed stream event was rung-promoted by the
+compressed wire. The full mode
 replays a seeded ``spot_trace`` with live deadline decisions. Results
 land in ``results/BENCH_goodput.json``.
 """
@@ -39,7 +48,9 @@ from repro.configs import get_config
 from repro.configs.base import ParallelConfig
 from repro.core.controller import LiveRController
 from repro.core.events import FailStopEvent, ResizeEvent
+from repro.core.reshard import plan_state_transfer
 from repro.core.world_pool import WorldPool
+from repro.reshard.wire import WirePolicy, wire_nbytes
 from repro.elastic import (
     DeadlineEstimator, ElasticScheduler, PrefetchPolicy, events_from_trace,
 )
@@ -55,27 +66,71 @@ ctrl = LiveRController(
     seq_len=32, global_batch=8, ckpt_dir=tempfile.mkdtemp(prefix="goodput_"),
     ckpt_interval=2, overlap="stream", stream_k=2, sync_compile=SMOKE,
     world_pool=WorldPool(capacity=3),
+    # compressed wire format (DESIGN.md §14): optimizer moments cross the
+    # wire int8-quantized, params stay lossless
+    wire_policy=WirePolicy(),
 )
 # warm-up: compile amortized, a durable checkpoint on disk (the fail-stop
 # rung needs one), and iteration_times seeded for the deadline estimator
 ctrl.train_steps(4)
 
 BIG = 1e9
+SAFETY = 1.25  # ElasticScheduler default
+if SMOKE:
+    # calibrate an emulated wire + a finite warning window so that ONE
+    # event (the FIRST in the trace, decided on empty history: default
+    # bandwidth and the gen-0 timings seed, hence deterministic) sits
+    # between the compressed and lossless stream estimates: the lattice
+    # promotes it to the overlap rung only because moments cross the wire
+    # quantized. The gap is sized to dominate estimate drift (prepare-warm
+    # flips, step jitter) between trace build time and decision time.
+    T_PROMOTE = ParallelConfig(dp=4, tp=2)
+    sizing = DeadlineEstimator(ctrl)
+    prep_cold = sizing.prepare_estimate(warm=False)
+    _, plan0 = plan_state_transfer(
+        cfg, ParallelConfig(dp=2, tp=2), T_PROMOTE,
+        source_policy=ctrl.source_policy,
+    )
+    logical0 = plan0.network_bytes
+    wire0 = sum(wire_nbytes(ctrl.wire_policy, t) for t in plan0.tasks
+                if getattr(t, "kind", "remote") == "remote")
+    gap_s = max(8.0, 3.0 * (prep_cold - 1.0))  # lossless-vs-wire transfer gap
+    WIRE_BW = max((logical0 - wire0) / gap_s, 1.0)
+    # the small bandwidth drives the DECISION side only (the estimator's
+    # default until history exists); transfers themselves run at host
+    # speed so the replay fits CI — the physical wire emulation is
+    # bench_dataplane's job
+    estimator = DeadlineEstimator(ctrl, default_bw_bytes_s=WIRE_BW)
+    est0 = estimator.estimate(T_PROMOTE)
+    W_PROMOTE = SAFETY * (est0.stream_total_s + 0.5 * gap_s)
+else:
+    estimator = DeadlineEstimator(ctrl)
 if SMOKE:
     # fixed trace covering the whole fallback lattice, deterministic
-    # decisions (windows at the extremes), deterministic replay
-    # (sync_prepare): stream commit, mid-prepare retarget, coalesce,
+    # decisions (windows at the extremes, plus the one calibrated
+    # promotion window), deterministic replay (sync_prepare):
+    # compression-promoted stream commit, mid-prepare retarget, coalesce,
     # zero-window checkpoint fallback, unannounced fail-stop, stream
     # commit, and a final tp-preserving shrink whose plan classifies
     # fully resident (delta IR: layer reuse, near-zero bytes moved)
     events = [
-        ResizeEvent(time_s=0.5, target=ParallelConfig(dp=2, tp=4), warning_s=BIG),
-        ResizeEvent(time_s=0.6, target=ParallelConfig(dp=1, tp=4), warning_s=BIG),
-        ResizeEvent(time_s=0.7, target=ParallelConfig(dp=1, tp=4), warning_s=BIG),
-        ResizeEvent(time_s=10.0, target=ParallelConfig(dp=2, tp=2), warning_s=0.0),
-        FailStopEvent(time_s=18.0, target=ParallelConfig(dp=1, tp=2)),
-        ResizeEvent(time_s=24.0, target=ParallelConfig(dp=2, tp=2), warning_s=BIG),
-        ResizeEvent(time_s=30.0, target=ParallelConfig(dp=1, tp=2), warning_s=BIG),
+        # the calibrated window: wide enough for the wire-priced stream
+        # estimate, too tight for its lossless counterfactual -> the
+        # compressed wire promotes this event a rung (decision=stream,
+        # decision_lossless below it). First in the trace so the deadline
+        # estimate is decided on empty history — later events queue behind
+        # live transfers, which would eat a finite window.
+        ResizeEvent(time_s=0.3, target=T_PROMOTE, warning_s=W_PROMOTE),
+        # the rest of the lattice trace starts after the promoted event
+        # has room to commit (its prepare + stream run live); gaps between
+        # these events mirror the original 7-event trace
+        ResizeEvent(time_s=12.5, target=ParallelConfig(dp=2, tp=4), warning_s=BIG),
+        ResizeEvent(time_s=12.6, target=ParallelConfig(dp=1, tp=4), warning_s=BIG),
+        ResizeEvent(time_s=12.7, target=ParallelConfig(dp=1, tp=4), warning_s=BIG),
+        ResizeEvent(time_s=22.0, target=ParallelConfig(dp=2, tp=2), warning_s=0.0),
+        FailStopEvent(time_s=30.0, target=ParallelConfig(dp=1, tp=2)),
+        ResizeEvent(time_s=36.0, target=ParallelConfig(dp=2, tp=2), warning_s=BIG),
+        ResizeEvent(time_s=42.0, target=ParallelConfig(dp=1, tp=2), warning_s=BIG),
     ]
     time_scale, sync_prepare = 1.0, True
 else:
@@ -89,7 +144,7 @@ ANALYTIC_SPACING = 600.0 if SMOKE else 20.0  # undo replay compression
 
 sched = ElasticScheduler(
     ctrl, time_scale=time_scale, sync_prepare=sync_prepare,
-    estimator=DeadlineEstimator(ctrl), max_steps=20_000,
+    estimator=estimator, max_steps=20_000,
     # max_pp matches the trace's own target bound (events_from_trace
     # max_pp=1 below) so prefetched pool keys can actually hit
     prefetch=PrefetchPolicy(ctrl, k=1, max_pp=1),
@@ -131,6 +186,10 @@ doc["measured"] = {
          "pause_s": r.total_pause_s, "reused_layers": r.reused_layers,
          "resident_layers": r.resident_layers,
          "skipped_bytes": r.skipped_bytes,
+         "resident_cells": getattr(r, "resident_cells", 0),
+         "wire_bytes": getattr(r, "wire_bytes", 0),
+         "logical_bytes": getattr(r, "logical_bytes", 0),
+         "operating_point": getattr(r, "operating_point", None),
          "moved_bytes": r.plan_network_bytes + r.plan_local_bytes,
          "warm_hit": r.warm_hit, "prepare_s": r.prepare_s,
          "prepare_source": r.prepare_source}
@@ -147,6 +206,12 @@ doc["measured"] = {
         "prefetch_started": sched.prefetch.started if sched.prefetch else 0,
     },
     "pool": ctrl.world_pool.stats.to_dict(),
+    "wire": {
+        "wire_bw_bytes_s": ctrl.wire_bw_bytes_s,
+        "logical_bytes": sum(getattr(r, "logical_bytes", 0)
+                             for r in ctrl.records),
+        "wire_bytes": sum(getattr(r, "wire_bytes", 0) for r in ctrl.records),
+    },
 }
 doc["analytic"] = {
     "system": "liver",
@@ -196,6 +261,17 @@ def main(argv=()) -> None:
         f"warm_median_s={wc['warm_prepare_s']};"
         f"cold_median_s={wc['cold_prepare_s']};speedup={wc['speedup']}",
     )
+    wire = meas["wire"]
+    promoted = [
+        e for e in payload["events"]
+        if e["outcome"] == "committed" and e["decision"] == "stream"
+        and e.get("decision_lossless") not in ("", "stream", None)
+    ]
+    emit(
+        "goodput/wire", 0.0,
+        f"logical={wire['logical_bytes']};wire={wire['wire_bytes']};"
+        f"rung_promoted={len(promoted)}",
+    )
     emit("goodput/json", 0.0, path)
 
     if check:
@@ -224,6 +300,22 @@ def main(argv=()) -> None:
         if not any(r["reused_layers"] > 0 for r in recs):
             raise SystemExit(
                 "no record reused layers: delta classification never fired"
+            )
+        # reuse-accounting identity (cell-level) on every emitted record:
+        # skipped bytes iff resident cells — the regression that once put
+        # skipped_bytes=12800 next to resident_layers=0 in this very file
+        from repro.core.records import reuse_identity_ok
+
+        bad = [r for r in recs if not reuse_identity_ok(r)]
+        if bad:
+            raise SystemExit(f"reuse identity violated on records: {bad}")
+        # compressed-wire rung gate: at least one committed stream event
+        # whose lossless counterfactual sits on a lower rung — the
+        # calibrated 0.6 window only fits because moments cross quantized
+        if not promoted:
+            raise SystemExit(
+                "no rung-promoted event: compressed wire never changed a "
+                "lattice decision"
             )
 
 

@@ -102,6 +102,10 @@ class ReconfigRecord(ReuseRecordMixin):
     stream_dispatch_s: float = 0.0
     stream_drain_s: float = 0.0
     generic_cells: int = 0
+    # resident_cells / skipped_bytes / wire_bytes / logical_bytes come from
+    # the mixin; the tuned data-plane parameters this reconfig ran with
+    # (None = the hand-set fallback constants, DESIGN.md §14)
+    operating_point: Optional[dict] = None
 
 
 class LiveRController:
@@ -127,6 +131,8 @@ class LiveRController:
         sync_compile: bool = False,
         world_pool: Optional[WorldPool] = None,
         max_spec_builds: int = 1,
+        wire_policy=None,
+        wire_bw_bytes_s: float | None = None,
     ):
         self.cfg = cfg
         self.opt_cfg = opt_cfg
@@ -144,6 +150,16 @@ class LiveRController:
         self._overlap_mode = overlap
         self.stream_k = stream_k
         self.source_policy = source_policy
+        # compressed wire format (DESIGN.md §14): None = fully lossless.
+        # Distinct from ``compression`` (gradient all-reduce int8+EF): the
+        # wire policy shapes what the RESHARD stream sends, per collection.
+        self.wire_policy = wire_policy
+        # emulated interconnect bandwidth for the live executors (benchmarks
+        # only; None on real hardware)
+        self.wire_bw_bytes_s = wire_bw_bytes_s
+        # per-reconfiguration tuned operating point (reshard.autotune),
+        # installed by request_resize/retarget_resize; None = fallbacks
+        self._operating_point = None
         # deterministic mode for parity tests / --check benchmark gates:
         # compile the split-step grad executable inline instead of in a
         # background thread, so the commit step index is reproducible
@@ -316,13 +332,19 @@ class LiveRController:
     # Prepare (background)
     # ------------------------------------------------------------------
     def request_resize(
-        self, target: ParallelConfig, overlap: Optional[str] = None
+        self,
+        target: ParallelConfig,
+        overlap: Optional[str] = None,
+        operating_point=None,
     ) -> int:
         """Trigger: spawn Shadow World preparation. Non-blocking.
 
         ``overlap`` overrides the constructor's transfer mode for THIS
         reconfiguration only — the deadline scheduler uses it to downgrade
         a single event to stop-copy without flipping the whole controller.
+        ``operating_point`` (reshard.autotune.OperatingPoint) likewise
+        overrides ``stream_k``/``staging_bytes`` for this reconfiguration;
+        None keeps the documented fallback constants.
 
         Consults the warm world pool first: a hit (or an in-flight
         speculative build for the same key, which the Prepare thread joins)
@@ -332,6 +354,8 @@ class LiveRController:
         if overlap is not None:
             assert overlap in ("stop_copy", "stream"), overlap
             self._overlap_mode = overlap
+        if operating_point is not None:
+            self._operating_point = operating_point
         mode = self._overlap_mode
         gen = self.machine.begin_prepare(description=target.describe())
 
@@ -431,7 +455,10 @@ class LiveRController:
             self._builder.result(timeout)
 
     def retarget_resize(
-        self, target: ParallelConfig, overlap: Optional[str] = None
+        self,
+        target: ParallelConfig,
+        overlap: Optional[str] = None,
+        operating_point=None,
     ) -> int:
         """A newer elasticity event supersedes the in-flight reconfiguration
         (paper §7 'Concurrent reconfiguration events').
@@ -446,7 +473,9 @@ class LiveRController:
         ReconfigRecord carrying whatever pre-copy work it had done.
         """
         if self._builder is None:
-            return self.request_resize(target, overlap=overlap)
+            return self.request_resize(
+                target, overlap=overlap, operating_point=operating_point
+            )
 
         reuse = None
         rec = self._pending_rec
@@ -482,7 +511,9 @@ class LiveRController:
             self.machine.cancel()
         self._reset_reconfig_state()
         self._grad_builder = grad_builder
-        gen_id = self.request_resize(target, overlap=overlap)
+        gen_id = self.request_resize(
+            target, overlap=overlap, operating_point=operating_point
+        )
         self._reuse = reuse
         return gen_id
 
@@ -663,16 +694,28 @@ class LiveRController:
         self._session_plan = plan
         self._session_targets = self._named_target_shardings(new_world)
 
+    def _op_params(self) -> tuple[int, int]:
+        """(stream_k, staging_bytes) for the current reconfiguration: the
+        tuned operating point when the scheduler installed one, else the
+        documented fallback constants."""
+        op = self._operating_point
+        if op is None:
+            return self.stream_k, self.staging_bytes
+        return op.stream_k, op.staging_bytes
+
     def _start_overlap_session(self) -> None:
         new_world: WorldHandle = self.machine.shadow.payload
         self._ensure_plan(new_world)
+        stream_k, staging_bytes = self._op_params()
         self._session = OverlapSession(
             self._session_specs,
             self._session_plan,
             {},  # sources provided per streaming round
             self._session_targets,
-            self.staging_bytes,
-            stream_k=self.stream_k,
+            staging_bytes,
+            stream_k=stream_k,
+            wire_policy=self.wire_policy,
+            wire_bw_bytes_s=self.wire_bw_bytes_s,
         )
         self._pending_rec = ReconfigRecord(
             gen_id=self._builder.gen_id,
@@ -684,6 +727,8 @@ class LiveRController:
             warm_hit=bool(new_world.timings.get("warm_hit", False)),
             prepare_source=new_world.timings.get("prepare_source", "cold"),
         )
+        if self._operating_point is not None:
+            self._pending_rec.operating_point = self._operating_point.to_dict()
         # retarget reuse: continue from the superseded session's streamed
         # state instead of restarting the stream from scratch
         if self._reuse is not None:
@@ -765,16 +810,19 @@ class LiveRController:
         # the shared engine (same protocol code as the sim oracle)
         t0 = time.perf_counter()
         named, extras = named_state_leaves(self.params, self.opt_state)
+        _, op_staging = self._op_params()
         moved, stats = live_reshard_planned(
             self._session_specs,
             plan,
             named,
             self._session_targets,
-            staging_bytes=self.staging_bytes,
+            staging_bytes=op_staging,
+            wire_policy=self.wire_policy,
+            wire_bw_bytes_s=self.wire_bw_bytes_s,
         )
         new_extras, rep_x = live_reshard(
             extras, self._extra_shardings(new_world),
-            staging_bytes=self.staging_bytes,
+            staging_bytes=op_staging,
         )
         self.params, self.opt_state = rebuild_state(
             moved, self.params, self.opt_state, new_extras
@@ -784,10 +832,15 @@ class LiveRController:
             stats.network_bytes + stats.local_bytes + rep_x.moved_bytes
         )
         rec.skipped_bytes = stats.resident_bytes
+        rec.resident_cells = stats.resident_cells
+        rec.wire_bytes = stats.wire_bytes
+        rec.logical_bytes = stats.logical_bytes
         rec.executed_bytes = stats.executed_bytes + rep_x.moved_bytes
         rec.stream_dispatch_s = stats.dispatch_seconds
         rec.stream_drain_s = stats.drain_seconds
         rec.generic_cells = stats.generic_cells
+        if self._operating_point is not None:
+            rec.operating_point = self._operating_point.to_dict()
 
         # 3. atomic switch: pointer swap of world references
         t0 = time.perf_counter()
@@ -834,9 +887,10 @@ class LiveRController:
         # a residual tail rather than a full re-stream wait
         named, extras = named_state_leaves(self.params, self.opt_state)
         session.resync(named, self.step, drain=False)
+        _, op_staging = self._op_params()
         new_extras, _ = live_reshard(
             extras, self._extra_shardings(new_world),
-            staging_bytes=self.staging_bytes,
+            staging_bytes=op_staging,
         )
         t1 = time.perf_counter()
         jax.block_until_ready((loss, grads))
@@ -868,7 +922,9 @@ class LiveRController:
         }
         g_moved, g_stats = live_reshard_planned(
             p_specs, p_plan, g_named, g_targets,
-            staging_bytes=self.staging_bytes,
+            staging_bytes=op_staging,
+            wire_policy=self.wire_policy,
+            wire_bw_bytes_s=self.wire_bw_bytes_s,
         )
         from repro.utils.pytree import tree_from_paths
 
@@ -911,6 +967,9 @@ class LiveRController:
         rec.reused_layers = rep.reused_layers
         rec.resident_layers = rep.resident_layers
         rec.skipped_bytes = rep.skipped_bytes + g_stats.resident_bytes
+        rec.resident_cells = rep.resident_cells + g_stats.resident_cells
+        rec.wire_bytes = rep.wire_bytes + g_stats.wire_bytes
+        rec.logical_bytes = rep.logical_bytes + g_stats.logical_bytes
         rec.plan_network_bytes = plan.network_bytes
         rec.plan_local_bytes = plan.local_bytes
         rec.moved_bytes = rep.total_bytes + g_stats.network_bytes + g_stats.local_bytes
@@ -938,6 +997,7 @@ class LiveRController:
         self._plan_seconds = 0.0
         self._reuse = None
         self._overlap_mode = self.overlap
+        self._operating_point = None
 
     # ------------------------------------------------------------------
     # Fail-stop fallback (invariant I4) and restart baselines

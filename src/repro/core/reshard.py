@@ -237,12 +237,23 @@ def live_reshard_planned(
     target_shardings: dict[str, Any],
     staging_bytes: int = DEFAULT_STAGING_BYTES,
     layers: Optional[list[int]] = None,
+    wire_policy=None,
+    wire_bw_bytes_s: float | None = None,
 ) -> tuple[dict[str, Any], StreamStats]:
     """Execute an intersection plan on live jax.Arrays via the shared
-    engine. Returns (destination leaves by tensor name, stats)."""
+    engine. Returns (destination leaves by tensor name, stats).
+
+    ``wire_policy`` (None = lossless) selects the per-collection wire
+    format for remote chunks; ``wire_bw_bytes_s`` enables the executor's
+    emulated-interconnect timing (benchmarks only)."""
     spec_map = {s.name: s for s in specs}
-    executor = LiveExecutor(spec_map, named_leaves, target_shardings, staging_bytes)
-    engine = ReshardEngine(plan, executor, staging_bytes=staging_bytes)
+    executor = LiveExecutor(
+        spec_map, named_leaves, target_shardings, staging_bytes,
+        wire_policy=wire_policy, wire_bw_bytes_s=wire_bw_bytes_s,
+    )
+    engine = ReshardEngine(
+        plan, executor, staging_bytes=staging_bytes, wire_policy=wire_policy
+    )
     stats = engine.run(layers)
     t1 = time.perf_counter()
     executor.block_until_ready()

@@ -89,12 +89,18 @@ def execute_plan(
     dst_stores: dict[int, RankStore],
     staging_bytes: int = DEFAULT_STAGING_BYTES,
     zero_copy_local: bool = True,
+    wire_policy=None,
 ) -> StreamStats:
-    """Run Algorithm 1 over simulated ranks via the shared engine."""
+    """Run Algorithm 1 over simulated ranks via the shared engine.
+
+    ``wire_policy`` (None = lossless) prices remote chunks in their
+    compressed wire format for the staging budget and the wire/logical
+    byte counters, matching the live path's accounting."""
     engine = ReshardEngine(
         plan,
-        SimExecutor(src_stores, dst_stores),
+        SimExecutor(src_stores, dst_stores, wire_policy=wire_policy),
         staging_bytes=staging_bytes,
         zero_copy_local=zero_copy_local,
+        wire_policy=wire_policy,
     )
     return engine.run()

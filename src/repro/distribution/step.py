@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, TrainConfig
-from repro.distribution import compress
+from repro.kernels import reshard_quant
 from repro.distribution.sharding import (
     batch_sharding,
     cache_shardings,
@@ -120,7 +120,9 @@ def make_update_fn(opt_cfg: AdamWConfig, compression: str = "none"):
 
     def update(grads, opt_state, params):
         if compression == "int8_ef":
-            grads, opt_state = compress.compress_decompress_with_ef(grads, opt_state)
+            grads, opt_state = reshard_quant.compress_decompress_with_ef(
+                grads, opt_state
+            )
         return adamw_update(opt_cfg, grads, opt_state, params)
 
     return update

@@ -34,6 +34,7 @@ from typing import Any, Callable, Optional
 
 from repro.core.events import FailStopEvent, ResizeEvent, sort_trace
 from repro.core.records import ReuseRecordMixin
+from repro.reshard.autotune import tune_operating_point
 
 
 # ---------------------------------------------------------------------------
@@ -59,6 +60,14 @@ class ReconfigEstimate:
     # prepare_s is the WARM estimate: the controller's pool holds a ready
     # world for the target, so Prepare skips lower+compile
     warm: bool = False
+    # wire pricing (DESIGN.md §14): the pause estimates above are priced on
+    # wire_bytes (what crosses the interconnect under the controller's
+    # WirePolicy); lossless_transfer_s is what the same plan would cost
+    # uncompressed, so the scheduler can report which rung the event would
+    # have gotten without compression
+    wire_bytes: int = 0
+    layers: int = 0
+    lossless_transfer_s: float = 0.0
 
     @property
     def stream_total_s(self) -> float:
@@ -70,12 +79,23 @@ class ReconfigEstimate:
         """Trigger -> committed via stop-copy (no boundary rounds)."""
         return self.prepare_s + self.stop_copy_pause_s
 
+    @property
+    def stream_total_lossless_s(self) -> float:
+        """stream_total_s had the plan moved uncompressed."""
+        return self.prepare_s + self.precopy_s + self.lossless_transfer_s
+
+    @property
+    def stop_copy_total_lossless_s(self) -> float:
+        """stop_copy_total_s had the plan moved uncompressed."""
+        return self.prepare_s + self.lossless_transfer_s
+
 
 def choose_mode(
     est: ReconfigEstimate,
     window_s: float,
     safety: float = 1.25,
     time_scale: float = 1.0,
+    lossless: bool = False,
 ) -> str:
     """The fallback lattice: highest rung whose estimate fits the window.
 
@@ -84,10 +104,18 @@ def choose_mode(
     checkpoint rung always fits (a durable save needs no shadow world and
     survives the resources vanishing at the deadline) and is therefore the
     unconditional last resort.
+
+    ``lossless=True`` re-ranks the lattice on the uncompressed transfer
+    estimates — the counterfactual decision the scheduler reports so the
+    benchmark can show which events the compressed wire promoted a rung.
     """
-    if est.stream_total_s * safety * time_scale <= window_s:
+    stream_s = est.stream_total_lossless_s if lossless else est.stream_total_s
+    stop_s = (
+        est.stop_copy_total_lossless_s if lossless else est.stop_copy_total_s
+    )
+    if stream_s * safety * time_scale <= window_s:
         return "stream"
-    if est.stop_copy_total_s * safety * time_scale <= window_s:
+    if stop_s * safety * time_scale <= window_s:
         return "stop_copy"
     return "checkpoint"
 
@@ -174,27 +202,59 @@ class DeadlineEstimator:
         seed = sum(t.get(k, 0.0) for k in ("mesh_s", "lower_s", "compile_s"))
         return seed or self.default_prepare_s
 
-    def bandwidth_estimate(self) -> float:
+    def measured_bandwidth(self) -> Optional[float]:
+        """Median transfer bandwidth over recent records, or ``None`` with
+        no history yet (the operating-point tuner treats None as "fall back
+        to the hand-set constants").
+
+        With a wire policy on the controller, bandwidth is measured in
+        PHYSICAL wire bytes per second so that pricing ``est.wire_bytes``
+        and the lossless counterfactual against it stay on one scale;
+        lossless controllers keep the historical moved-bytes measure."""
+        compressed = getattr(self.ctrl, "wire_policy", None) is not None
         bws = []
         for r in self._recent():
             moved = r.moved_bytes
+            if compressed:
+                moved = getattr(r, "wire_bytes", 0) or r.moved_bytes
             secs = r.transfer_s + r.resync_s + r.precopy_s
             if moved > 0 and secs > 0:
                 bws.append(moved / secs)
-        return _median(bws) or self.default_bw
+        return _median(bws)
+
+    def bandwidth_estimate(self) -> float:
+        return self.measured_bandwidth() or self.default_bw
 
     def step_estimate(self) -> float:
         return _median(list(self.ctrl.iteration_times)[-16:]) or self.default_step_s
 
     # -- the estimate ---------------------------------------------------
-    def _plan_for(self, target) -> tuple[int, int]:
-        """(plan bytes, plan layers) for current-world -> target.
+    def _price_plan(self, plan) -> tuple[int, int, int]:
+        """(logical bytes, wire bytes, streaming layers) of a plan.
 
         Priced on the classified plan IR (DESIGN.md §13): bytes are REMOTE
         only — resident cells never move and local relayouts never cross a
         wire — and fully-resident layers need no pre-copy rounds. This is
         what lets a tp-preserving resize fit the overlap rung inside a
-        warning window its full-copy byte count would have blown."""
+        warning window its full-copy byte count would have blown. Wire
+        bytes price the same remote tasks under the controller's WirePolicy
+        (DESIGN.md §14); equal to logical bytes when lossless."""
+        from repro.reshard.wire import wire_nbytes
+
+        policy = getattr(self.ctrl, "wire_policy", None)
+        logical = plan.network_bytes
+        if policy is None:
+            wire = logical
+        else:
+            wire = sum(
+                wire_nbytes(policy, t)
+                for t in plan.tasks
+                if getattr(t, "kind", "remote") == "remote"
+            )
+        return logical, wire, len(plan.layers()) - len(plan.resident_layers())
+
+    def _plan_for(self, target) -> tuple[int, int, int]:
+        """(logical bytes, wire bytes, layers) for current-world -> target."""
         b = getattr(self.ctrl, "_builder", None)
         if b is not None and b.ready and not b.abandoned:
             handle = b.result()
@@ -204,19 +264,14 @@ class DeadlineEstimator:
                 and bundle is not None
                 and bundle[0] == self.ctrl.world.parallel
             ):
-                plan = bundle[2]
-                return plan.network_bytes, len(plan.layers()) - len(
-                    plan.resident_layers()
-                )
+                return self._price_plan(bundle[2])
         from repro.core.reshard import plan_state_transfer
 
         _, plan = plan_state_transfer(
             self.ctrl.cfg, self.ctrl.world.parallel, target,
             source_policy=self.ctrl.source_policy,
         )
-        return plan.network_bytes, len(plan.layers()) - len(
-            plan.resident_layers()
-        )
+        return self._price_plan(plan)
 
     def _pool_warm(self, target) -> bool:
         """True when the controller's warm pool holds a ready world for
@@ -227,11 +282,14 @@ class DeadlineEstimator:
         return pool.contains(self.ctrl.pool_key(target))
 
     def estimate(self, target) -> ReconfigEstimate:
-        plan_bytes, layers = self._plan_for(target)
+        plan_bytes, wire_bytes, layers = self._plan_for(target)
         bw = self.bandwidth_estimate()
         step_s = self.step_estimate()
         rounds = math.ceil(layers / max(1, self.ctrl.stream_k))
-        transfer_s = plan_bytes / bw
+        # the rungs are priced on what actually crosses the wire under the
+        # controller's WirePolicy; the lossless figure is kept alongside so
+        # the decision can be compared to its uncompressed counterfactual
+        transfer_s = wire_bytes / bw
         warm = self._pool_warm(target)
         return ReconfigEstimate(
             prepare_s=self.prepare_estimate(warm=warm),
@@ -247,6 +305,9 @@ class DeadlineEstimator:
             plan_bytes=plan_bytes,
             rounds=rounds,
             step_s=step_s,
+            wire_bytes=wire_bytes,
+            layers=layers,
+            lossless_transfer_s=plan_bytes / bw,
         )
 
 
@@ -338,6 +399,10 @@ class EventOutcome(ReuseRecordMixin):
     window_s: float
     target: str
     decision: str = ""  # stream | stop_copy | checkpoint | coalesce | cancel | noop
+    # the counterfactual rung the lattice would have picked on the
+    # uncompressed transfer estimate — differs from ``decision`` exactly
+    # when the compressed wire promoted this event a rung (DESIGN.md §14)
+    decision_lossless: str = ""
     outcome: str = ""  # committed | retargeted | fell_back | aborted | coalesced
     gen_id: int = -1
     mode: str = ""  # ReconfigRecord.mode of the commit, when one happened
@@ -346,6 +411,7 @@ class EventOutcome(ReuseRecordMixin):
     commit_clock_s: float = -1.0
     met_deadline: Optional[bool] = None
     pause_s: float = 0.0
+    operating_point: Optional[dict] = None  # tuned data-plane parameters
 
     def to_dict(self) -> dict:
         return dict(self.__dict__)
@@ -498,6 +564,11 @@ class ElasticScheduler:
                 o.reused_layers = rec.reused_layers
                 o.resident_layers = rec.resident_layers
                 o.skipped_bytes = rec.skipped_bytes
+                o.resident_cells = rec.resident_cells
+                o.wire_bytes = rec.wire_bytes
+                o.logical_bytes = rec.logical_bytes
+                if rec.operating_point is not None:
+                    o.operating_point = rec.operating_point
                 o.pause_s = rec.total_pause_s
                 self._pending = None
 
@@ -590,6 +661,22 @@ class ElasticScheduler:
             est, window, self.safety, self.time_scale
         )
         o.decision = mode
+        o.decision_lossless = self.mode_override or choose_mode(
+            est, window, self.safety, self.time_scale, lossless=True
+        )
+
+        # tune the rung's operating point for this (plan, window) pair —
+        # measured bandwidth only; a cold estimator yields the fallback
+        # constants (source="fallback") and the controller keeps its own
+        bw = getattr(self.estimator, "measured_bandwidth", lambda: None)()
+        op = tune_operating_point(
+            est.wire_bytes,
+            est.layers,
+            window / self.time_scale if self.time_scale > 0 else window,
+            bw,
+            step_s=est.step_s,
+        )
+        o.operating_point = op.to_dict()
 
         if p is not None:
             # a newer event supersedes the in-flight reconfiguration
@@ -600,14 +687,18 @@ class ElasticScheduler:
                 self._restore(target, o, save_first=True)
                 return
             gen = self._clocked(
-                lambda: self.ctrl.retarget_resize(target, overlap=mode)
+                lambda: self.ctrl.retarget_resize(
+                    target, overlap=mode, operating_point=op
+                )
             )
         elif mode == "checkpoint":
             self._restore(target, o, save_first=True)
             return
         else:
             gen = self._clocked(
-                lambda: self.ctrl.request_resize(target, overlap=mode)
+                lambda: self.ctrl.request_resize(
+                    target, overlap=mode, operating_point=op
+                )
             )
         if self.sync_prepare:
             self.ctrl.wait_shadow_ready()

@@ -24,6 +24,10 @@ from repro.kernels.reshard_pack import (
     scatter_rows_pallas,
     unpack_rows_pallas,
 )
+from repro.kernels.reshard_quant import (
+    dequant_scatter_rows_pallas,
+    pack_quant_rows_pallas,
+)
 from repro.kernels.ssd_scan import ssd_intra_chunk_pallas
 
 
@@ -195,6 +199,54 @@ def relayout_rows(dst, src, row_starts, block_rows: int):
         )
     return _ref.relayout_rows_ref(
         dst, src, jnp.asarray(row_starts, jnp.int32), block_rows
+    )
+
+
+def pack_quant_rows(src, row_starts, block_rows: int, fmt: str):
+    """Gather + per-tile quantize row blocks for the compressed wire format.
+
+    Returns ``(qbuf (nb*block_rows, C), scales (nb, 1) float32)``. One tile
+    = one row-block; the sidecar carries one symmetric scale per tile.
+    Deterministic: the same source rows always produce the same payload and
+    scales, so a dirty-layer re-stream lands bitwise-identical bytes.
+    """
+    use, interp = _use_pallas()
+    aligned = (
+        src.shape[0] % block_rows == 0
+        and src.shape[1] % 128 == 0
+        and _starts_aligned(row_starts, block_rows)
+    )
+    if use and aligned:
+        return pack_quant_rows_pallas(
+            src, jnp.asarray(row_starts, jnp.int32), block_rows, fmt,
+            interpret=interp,
+        )
+    return _ref.pack_quant_rows_ref(
+        src, jnp.asarray(row_starts, jnp.int32), block_rows, fmt
+    )
+
+
+def dequant_scatter_rows(dst, buf, scales, row_starts, block_rows: int):
+    """Dequantize + overwrite-scatter quantized tiles into ``dst`` (donated).
+
+    The compressed-wire counterpart of ``scatter_rows``: rows not named by
+    ``row_starts`` keep their bytes, duplicate starts last-wins, and because
+    dequant is a deterministic elementwise map, re-applying the same payload
+    is idempotent.
+    """
+    use, interp = _use_pallas()
+    aligned = (
+        dst.shape[0] % block_rows == 0
+        and dst.shape[1] % 128 == 0
+        and _starts_aligned(row_starts, block_rows)
+    )
+    if use and aligned:
+        return dequant_scatter_rows_pallas(
+            dst, buf, scales, jnp.asarray(row_starts, jnp.int32), block_rows,
+            interpret=interp,
+        )
+    return _ref.dequant_scatter_rows_ref(
+        dst, buf, scales, jnp.asarray(row_starts, jnp.int32), block_rows
     )
 
 

@@ -201,6 +201,66 @@ def relayout_rows_ref(
     return jax.lax.fori_loop(0, nb, body, dst)
 
 
+def pack_quant_rows_ref(
+    src: jax.Array,
+    row_starts: jax.Array,
+    block_rows: int,
+    fmt: str,
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for ``pack_quant_rows_pallas``: gather ``len(row_starts)``
+    row-blocks and quantize each tile symmetrically around zero with its own
+    scale. Returns ((nb*block_rows, C) quantized, (nb, 1) float32 scales).
+
+    The arithmetic is written out independently of the kernel body so
+    interpret-vs-ref parity is a real check: ``scale = max(absmax, eps) *
+    (1/qmax)`` (reciprocal folded to a float32 constant — the divide form
+    is not bitwise-stable across compilation contexts); int8
+    rounds-to-nearest then clips, fp8-e4m3 casts (|x/scale| <= 448 by
+    construction). All-zero tiles hit the eps floor and quantize to exact
+    zeros.
+    """
+    from repro.kernels.reshard_quant import QUANT_EPS, WIRE_QMAX
+
+    nb = row_starts.shape[0]
+    qmax = WIRE_QMAX[fmt]
+
+    def take(start):
+        return jax.lax.dynamic_slice_in_dim(src, start, block_rows, axis=0)
+
+    blocks = jax.vmap(take)(row_starts).astype(jnp.float32)  # (nb, br, C)
+    absmax = jnp.max(jnp.abs(blocks), axis=(1, 2))  # (nb,)
+    scales = jnp.maximum(absmax, QUANT_EPS) * jnp.float32(1.0 / qmax)
+    y = blocks / scales[:, None, None]
+    if fmt == "int8":
+        q = jnp.clip(jnp.round(y), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = y.astype(jnp.float8_e4m3fn)
+    return q.reshape(nb * block_rows, src.shape[1]), scales[:, None]
+
+
+def dequant_scatter_rows_ref(
+    dst: jax.Array,
+    buf: jax.Array,
+    scales: jax.Array,
+    row_starts: jax.Array,
+    block_rows: int,
+) -> jax.Array:
+    """Oracle for ``dequant_scatter_rows_pallas``: dequantize each tile with
+    its sidecar scale and overwrite-scatter into ``dst`` (rows not named by
+    ``row_starts`` keep their values; duplicate starts last-wins via the
+    sequential fori_loop, matching the kernel's sequential grid)."""
+    nb = row_starts.shape[0]
+    blocks = buf.reshape(nb, block_rows, buf.shape[1]).astype(jnp.float32)
+    deq = (blocks * scales.reshape(nb)[:, None, None]).astype(dst.dtype)
+
+    def body(i, acc):
+        return jax.lax.dynamic_update_slice_in_dim(
+            acc, deq[i], row_starts[i], axis=0
+        )
+
+    return jax.lax.fori_loop(0, nb, body, dst)
+
+
 def scatter_rows_ref(
     dst: jax.Array, buf: jax.Array, row_starts: jax.Array, block_rows: int
 ) -> jax.Array:

@@ -1,0 +1,241 @@
+"""Pallas TPU kernels for the compressed wire format of the streaming resharder.
+
+The reshard data plane (paper Algorithm 1; ``reshard_pack.py``) moves raw
+bytes: pack gathers planned row-blocks into the staging buffer, scatter
+overwrites them into the destination shard. After the delta planner (PR 6)
+the bytes that still cross the wire are dominated by optimizer moments,
+which tolerate aggressive formats — so these kernels fuse symmetric
+quantization into the pack (bf16/fp32 → int8 or fp8-e4m3, one per-tile
+scale per row-block carried in a float32 sidecar array) and the matching
+dequantization into the overwrite-scatter. A tile is one ``block_rows``
+row-block, i.e. one grid step of the pack kernel; the sidecar has one
+scale per tile.
+
+Quantization is symmetric around zero with a per-tile scale::
+
+    scale = max(absmax(tile), eps) / qmax        # eps floor: all-zero tiles
+    int8:      q = clip(round(x / scale), -127, 127)
+    fp8-e4m3:  q = cast_fp8(x / scale)           # |x/scale| <= 448 by construction
+
+and dequant is ``q * scale`` cast back to the destination dtype. Both
+directions are deterministic elementwise maps, so streaming the same tile
+twice produces bitwise-identical destination bytes — the idempotence
+invariant the dirty-layer re-stream path depends on survives compression.
+
+``dequant_scatter_rows`` composes with ``scatter_rows``'s overwrite
+semantics: the destination is donated and aliased into the output
+(``input_output_aliases``), untouched rows keep their bytes, duplicate
+starts resolve last-wins on the sequential grid.
+
+This module is also the home of the int8 symmetric-quant math that used to
+live in ``distribution/compress.py`` (per-tensor :func:`quantize_int8` /
+:func:`dequantize_int8` and the error-feedback round trip
+:func:`compress_decompress_with_ef`): the gradient-compression path and the
+wire format now share one quantizer definition, and the per-tensor
+functions double as the scalar oracle the kernel tests check against.
+
+Oracles: :func:`repro.kernels.ref.pack_quant_rows_ref` /
+``dequant_scatter_rows_ref``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Smallest representable scale floor: keeps all-zero (and fully denormal)
+# tiles from dividing by zero; such tiles quantize to 0 and dequantize to 0.
+QUANT_EPS = 1e-12
+
+# np.finfo(float8_e4m3fn) raises on some numpy versions — hardcode the max.
+FP8_E4M3_MAX = 448.0
+
+WIRE_QMAX = {"int8": 127.0, "fp8_e4m3": FP8_E4M3_MAX}
+WIRE_QDTYPE = {"int8": jnp.int8, "fp8_e4m3": jnp.float8_e4m3fn}
+# float32 per-tile scale carried alongside the quantized payload
+SIDECAR_BYTES_PER_TILE = 4
+
+
+def wire_itemsize(fmt: str) -> int:
+    """Bytes per element of the quantized payload (both formats are 1B)."""
+    return jnp.dtype(WIRE_QDTYPE[fmt]).itemsize
+
+
+def _quantize_tile(x: jax.Array, fmt: str) -> tuple[jax.Array, jax.Array]:
+    """Quantize one tile (any shape) → (q, scale ()-float32). Shared by the
+    kernel bodies and the jnp oracle so both paths are the same arithmetic.
+
+    The scale is ``absmax * (1/qmax)`` with the reciprocal folded to a
+    float32 constant, NOT ``absmax / qmax``: XLA strength-reduces division
+    by a constant to a reciprocal multiply only in some fusion contexts, so
+    the divide form computes 1-ULP-different scales between the Pallas
+    interpreter and the jnp oracle. Multiply form is bitwise-stable."""
+    xf = x.astype(jnp.float32)
+    qmax = WIRE_QMAX[fmt]
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), QUANT_EPS) * jnp.float32(1.0 / qmax)
+    y = xf / scale
+    if fmt == "int8":
+        q = jnp.clip(jnp.round(y), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = y.astype(jnp.float8_e4m3fn)
+    return q, scale
+
+
+def _dequantize_tile(q: jax.Array, scale: jax.Array, out_dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels
+# ---------------------------------------------------------------------------
+
+
+def _make_quant_kernel(fmt: str):
+    def kernel(starts_ref, src_ref, q_ref, scale_ref):
+        del starts_ref  # consumed by the index maps
+        q, scale = _quantize_tile(src_ref[...], fmt)
+        q_ref[...] = q
+        scale_ref[0, 0] = scale
+
+    return kernel
+
+
+def pack_quant_rows_pallas(
+    src: jax.Array,  # (R, C)
+    row_starts: jax.Array,  # (nb,) int32
+    block_rows: int,
+    fmt: str,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Gather + quantize nb row-blocks: ((nb*block_rows, C) q, (nb, 1) f32).
+
+    One grid step per tile: the block is gathered through the scalar-
+    prefetched offset table exactly like ``pack_rows_pallas``, its absmax
+    reduced in-register, and the quantized payload plus sidecar scale
+    written in the same pass — no second HBM round trip over the staged
+    bytes to compute scales.
+    """
+    nb = row_starts.shape[0]
+    C = src.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec(
+                (block_rows, C),
+                lambda i, starts: (starts[i] // block_rows, 0),
+            ),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, C), lambda i, starts: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, starts: (i, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        _make_quant_kernel(fmt),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nb * block_rows, C), WIRE_QDTYPE[fmt]),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(row_starts, src)
+
+
+def _make_dequant_scatter_kernel(out_dtype):
+    def kernel(starts_ref, buf_ref, scale_ref, dst_ref, o_ref):
+        del starts_ref, dst_ref  # starts: index maps; dst: aliased output
+        o_ref[...] = _dequantize_tile(buf_ref[...], scale_ref[0, 0], out_dtype)
+
+    return kernel
+
+
+def dequant_scatter_rows_pallas(
+    dst: jax.Array,  # (R, C) — donated; aliased into the output
+    buf: jax.Array,  # (nb*block_rows, C) quantized payload
+    scales: jax.Array,  # (nb, 1) float32 sidecar
+    row_starts: jax.Array,  # (nb,) int32
+    block_rows: int,
+    interpret: bool = False,
+) -> jax.Array:
+    """Dequantize + overwrite-scatter tiles into ``dst`` at the row offsets.
+
+    The compressed-wire counterpart of ``scatter_rows_pallas``: same
+    aliased-destination overwrite semantics (untouched rows keep their
+    bytes, duplicate starts last-wins), with the per-tile dequant fused in
+    front of the store instead of materializing a dequantized staging
+    buffer first.
+    """
+    nb = row_starts.shape[0]
+    C = dst.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_rows, C), lambda i, starts: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, starts: (i, 0)),
+            pl.BlockSpec(
+                (block_rows, C), lambda i, starts: (starts[i] // block_rows, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_rows, C), lambda i, starts: (starts[i] // block_rows, 0)
+        ),
+    )
+    return pl.pallas_call(
+        _make_dequant_scatter_kernel(dst.dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(dst.shape, dst.dtype),
+        # flattened input index 3 (starts, buf, scales, dst) -> output 0
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(row_starts, buf, scales, dst)
+
+
+# ---------------------------------------------------------------------------
+# Per-tensor int8 quantization + error feedback (ex distribution/compress.py)
+# ---------------------------------------------------------------------------
+
+
+def quantize_int8(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization: (q int8, scale ()-f32).
+
+    The whole-tensor special case of the wire format's per-tile quantizer
+    (one tile = the tensor); kept as the gradient-compression entry point
+    and the scalar oracle for the kernel tests.
+    """
+    q, scale = _quantize_tile(g, "int8")
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return _dequantize_tile(q, scale, jnp.float32)
+
+
+def compress_decompress_with_ef(grads, opt_state):
+    """Int8 round trip with error feedback carried in ``opt_state['ef']``.
+
+    Each leaf adds its residual from the previous step before quantizing
+    and stores the new residual, so the quantization error is re-injected
+    instead of lost (beyond-paper extension, DESIGN.md §8).
+    """
+    ef = opt_state["ef"]
+
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(corrected)
+        deq = dequantize_int8(q, scale)
+        return deq, corrected - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    outs = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_e = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    new_opt = dict(opt_state)
+    new_opt["ef"] = new_e
+    return new_g, new_opt

@@ -22,14 +22,23 @@ package executes it:
     iteration boundary (pre-copy), at most one round's scatters in
     flight, dirty-layer re-sync overlapped with the final grad
     computation, single drain at commit (DESIGN.md §9).
+  * :class:`WirePolicy`      — per-collection compressed wire format for
+    remote chunks (optimizer moments int8 by default, params lossless),
+    executed by the ``pack_quant_rows``/``dequant_scatter_rows`` kernels
+    and priced by every byte counter as wire vs logical bytes.
+  * :func:`tune_operating_point` — measured-bandwidth tuner that picks
+    ``stream_k``, chunk size and staging budget per (plan bytes, window)
+    instead of the hand-set constants (DESIGN.md §14).
 
 See DESIGN.md §9 for the architecture and the commit protocol.
 """
 
+from repro.reshard.autotune import OperatingPoint, tune_operating_point
 from repro.reshard.chunking import chunk_task, row_batches
 from repro.reshard.engine import ReshardEngine, StreamStats, DEFAULT_STAGING_BYTES
 from repro.reshard.executors import LiveExecutor, SimExecutor
 from repro.reshard.overlap import OverlapSession
+from repro.reshard.wire import WirePolicy, wire_nbytes
 
 __all__ = [
     "ReshardEngine",
@@ -38,6 +47,10 @@ __all__ = [
     "SimExecutor",
     "LiveExecutor",
     "OverlapSession",
+    "OperatingPoint",
+    "WirePolicy",
     "chunk_task",
     "row_batches",
+    "tune_operating_point",
+    "wire_nbytes",
 ]

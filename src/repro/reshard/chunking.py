@@ -11,6 +11,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.intersection import TransferTask
+from repro.reshard.wire import wire_nbytes
 
 
 def rows_per_budget(per_row_bytes: int, budget: int) -> int:
@@ -33,14 +34,38 @@ def row_batches(
     return out
 
 
-def chunk_task(task: TransferTask, budget: int) -> list[TransferTask]:
+def chunk_task(
+    task: TransferTask, budget: int, wire_policy=None
+) -> list[TransferTask]:
     """Split a task whose payload exceeds the staging budget into sub-slices
-    along its largest dim."""
-    if task.nbytes <= budget:
+    along its largest dim.
+
+    The budget bounds what is physically *staged*: under a quantizing
+    ``wire_policy`` a remote task's staged payload is its wire bytes
+    (packed elements + sidecar scales), so chunk boundaries are computed
+    from the wire size — a quantized task packs ~4× more logical rows into
+    the same staging budget. The emitted chunks still carry logical
+    ``nbytes`` (the plan's accounting unit); ``wire_policy=None`` preserves
+    the historical lossless arithmetic exactly.
+    """
+    staged = wire_nbytes(wire_policy, task)
+    if staged <= budget:
         return [task]
     shape = task.shape()
     d = int(np.argmax(shape))
-    per_row = task.nbytes // shape[d]
+    if (
+        wire_policy is not None
+        and getattr(task, "kind", "remote") == "remote"
+        and wire_policy.format_for(task.collection) != "none"
+        and len(shape) > 0
+        and shape[0] > 1
+    ):
+        # sidecar scales are per dim-0 row: splitting any other dim keeps
+        # the full sidecar in every chunk and overshoots the budget, so a
+        # quantized task always splits along the leading dim (where
+        # staged // shape[0] is its exact per-row wire cost)
+        d = 0
+    per_row = max(1, staged // shape[d])
     lo, hi = task.bounds[d]
     out = []
     for start, end in row_batches(lo, hi, per_row, budget):

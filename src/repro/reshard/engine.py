@@ -20,8 +20,13 @@ from typing import Iterable, Optional, Protocol
 
 from repro.core.intersection import TransferPlan, TransferTask
 from repro.reshard.chunking import chunk_task
+from repro.reshard.wire import wire_nbytes
 
-DEFAULT_STAGING_BYTES = 512 * 1024 * 1024  # paper default B = 512 MB
+# Documented fallback (paper default B = 512 MB): the autotuner
+# (repro.reshard.autotune) picks a measured staging budget per reconfig
+# when bandwidth history exists; this constant is what every path uses
+# when it does not.
+DEFAULT_STAGING_BYTES = 512 * 1024 * 1024
 
 
 @dataclass
@@ -29,6 +34,13 @@ class StreamStats:
     layers_streamed: int = 0
     network_bytes: int = 0
     local_bytes: int = 0
+    # compressed wire format (DESIGN.md §14): logical_bytes is what the plan
+    # says streamed (== network_bytes), wire_bytes is what physically crossed
+    # the interconnect under the wire policy (quantized payload + sidecar
+    # scales; equal to logical_bytes when lossless) — the ratio of the two is
+    # the stream's compression factor
+    wire_bytes: int = 0
+    logical_bytes: int = 0
     # bytes whose cells were classified resident: already in place on the
     # right device, counted here and moved nowhere (DESIGN.md §13)
     resident_bytes: int = 0
@@ -61,6 +73,8 @@ class StreamStats:
         self.layers_streamed += other.layers_streamed
         self.network_bytes += other.network_bytes
         self.local_bytes += other.local_bytes
+        self.wire_bytes += other.wire_bytes
+        self.logical_bytes += other.logical_bytes
         self.resident_bytes += other.resident_bytes
         self.resident_cells += other.resident_cells
         self.peak_staging_bytes = max(
@@ -101,6 +115,7 @@ class ReshardEngine:
         staging_bytes: int = DEFAULT_STAGING_BYTES,
         zero_copy_local: bool = True,
         delta: bool = True,
+        wire_policy=None,
     ):
         self.plan = plan
         self.executor = executor
@@ -109,6 +124,11 @@ class ReshardEngine:
         # delta=False demotes resident cells to the pre-classification local
         # path — the full-copy baseline benchmarks compare against
         self.delta = delta
+        # None = fully lossless wire (the byte-oracle default); a WirePolicy
+        # quantizes remote chunks of its configured collections on the wire,
+        # shrinking both staged bytes and the staging budget they count
+        # against (Theorem 1 bounds *wire* bytes — that is what is staged)
+        self.wire_policy = wire_policy
 
     def layers(self) -> list[int]:
         return self.plan.layers()
@@ -178,18 +198,21 @@ class ReshardEngine:
                     self.executor.apply(task)
                     stats.local_bytes += task.nbytes
                     continue
-                for chunk in chunk_task(task, self.staging_bytes):
+                for chunk in chunk_task(task, self.staging_bytes, self.wire_policy):
                     stats.chunks += 1
-                    if staging_used + chunk.nbytes > self.staging_bytes:
+                    staged = wire_nbytes(self.wire_policy, chunk)
+                    if staging_used + staged > self.staging_bytes:
                         # flush: everything staged so far is assembled into
                         # the destination shard; buffer is reused
                         staging_used = 0
-                    staging_used += chunk.nbytes
+                    staging_used += staged
                     stats.peak_staging_bytes = max(
                         stats.peak_staging_bytes, staging_used
                     )
                     self.executor.apply(chunk)
                     stats.network_bytes += chunk.nbytes
+                    stats.logical_bytes += chunk.nbytes
+                    stats.wire_bytes += staged
             stats.per_layer_bytes[layer] = stats.per_layer_bytes.get(
                 layer, 0
             ) + sum(t.nbytes for t in dtasks)

@@ -52,6 +52,7 @@ from typing import Any
 from repro.core.intersection import TransferTask
 from repro.core.resource_view import TensorSpec
 from repro.reshard.chunking import rows_per_budget
+from repro.reshard.wire import wire_nbytes
 
 
 # ---------------------------------------------------------------------------
@@ -60,12 +61,26 @@ from repro.reshard.chunking import rows_per_budget
 
 
 class SimExecutor:
-    """Copy planned chunks between per-rank numpy shard stores."""
+    """Copy planned chunks between per-rank numpy shard stores.
 
-    def __init__(self, src_stores: dict[int, Any], dst_stores: dict[int, Any]):
+    The sim always copies losslessly (it is the byte-level semantics
+    oracle), but it *prices* wire bytes under the given policy: its
+    ``wire_bytes`` counter reports what a compressed wire would have
+    carried for the same plan, so sim↔live accounting comparisons hold
+    with or without quantization.
+    """
+
+    def __init__(
+        self,
+        src_stores: dict[int, Any],
+        dst_stores: dict[int, Any],
+        wire_policy=None,
+    ):
         self.src_stores = src_stores
         self.dst_stores = dst_stores
+        self.wire_policy = wire_policy
         self.executed_bytes = 0
+        self.wire_bytes = 0
 
     def begin_layer(self, layer: int) -> None:
         pass
@@ -83,6 +98,7 @@ class SimExecutor:
         # byte oracle counts them as zero moved bytes (DESIGN.md §13)
         if not task.resident:
             self.executed_bytes += task.nbytes
+            self.wire_bytes += wire_nbytes(self.wire_policy, task)
 
     def end_layer(self, layer: int) -> None:
         pass
@@ -103,6 +119,7 @@ _ZEROS_CACHE: dict = {}
 _SCATTER_CACHE: dict = {}
 _RELAYOUT_CACHE: dict = {}
 _RELAYOUT_ND_CACHE: dict = {}
+_DEQ_SCATTER_CACHE: dict = {}
 _JIT_CACHE_MAX = 64
 
 
@@ -132,7 +149,7 @@ def _await_staged(buf) -> float:
 
 def _jit_helpers():
     """Module-level jitted copy helpers (cached across executor instances)."""
-    global _DUS0, _DUS_ND, _PACK2D
+    global _DUS0, _DUS_ND, _PACK2D, _PACKQ2D
     if "_DUS0" in globals():
         return
     import jax
@@ -160,6 +177,15 @@ def _jit_helpers():
     # collapse-to-2D + row gather as one compiled program on the source mesh
     # (caches per (leaf shape, starts length) family)
     _PACK2D = jax.jit(_pack2d)
+
+    def _packq2d(leaf, starts, fmt):
+        from repro.kernels import ops
+
+        return ops.pack_quant_rows(leaf.reshape(leaf.shape[0], -1), starts, 1, fmt)
+
+    # compressed-wire pack: gather + per-row quantize in one program on the
+    # source mesh, returning (int8/fp8 payload, float32 sidecar scales)
+    _PACKQ2D = jax.jit(_packq2d, static_argnums=(2,))
 
 
 def _zeros_fn(shape: tuple, dtype: str, sharding):
@@ -200,6 +226,32 @@ def _scatter_fn(sharding):
 
         fn = _cache_put(
             _SCATTER_CACHE,
+            sharding,
+            jax.jit(f, donate_argnums=(0,), out_shardings=sharding),
+        )
+    return fn
+
+
+def _dequant_scatter_fn(sharding):
+    """Jitted fused dequant + overwrite-scatter for the compressed wire
+    path: collapse the donated carry to 2-D, dequantize each staged tile
+    with its sidecar scale and scatter it at the given row offsets, restore
+    the carry shape. Same overwrite/idempotence semantics as
+    ``_scatter_fn`` — dequant is a deterministic elementwise map, so
+    re-applying the same payload lands bitwise-identical bytes."""
+    fn = _DEQ_SCATTER_CACHE.get(sharding)
+    if fn is None:
+        import jax
+
+        def f(carry, buf, scales, starts):
+            from repro.kernels import ops
+
+            c2 = carry.reshape(carry.shape[0], -1)
+            c2 = ops.dequant_scatter_rows(c2, buf, scales, starts, 1)
+            return c2.reshape(carry.shape)
+
+        fn = _cache_put(
+            _DEQ_SCATTER_CACHE,
             sharding,
             jax.jit(f, donate_argnums=(0,), out_shardings=sharding),
         )
@@ -287,6 +339,8 @@ class LiveExecutor:
         staging_bytes: int,
         free_sources: bool = False,
         fused: bool = True,
+        wire_policy=None,
+        wire_bw_bytes_s: float | None = None,
     ):
         import jax
         import jax.numpy as jnp
@@ -299,8 +353,25 @@ class LiveExecutor:
         self.staging_bytes = staging_bytes
         self.free_sources = free_sources
         self.fused = fused
+        # per-kind wire policy: None = fully lossless (the byte-oracle
+        # default). With a policy, remote row batches of quantized
+        # collections go through the fused pack-quant -> staged put ->
+        # dequant-scatter chain; the generic per-cell fallback and the
+        # legacy (fused=False) baseline stay lossless.
+        self.wire_policy = wire_policy
+        # emulated interconnect: when set, every staged wire transfer
+        # blocks for wire_bytes / wire_bw_bytes_s. This container's host
+        # "transfers" are memcpys, so without an emulated wire the payload
+        # size cannot show up in wall time; benches set this to measure
+        # compression as effective bandwidth (documented deviation,
+        # DESIGN.md §14).
+        self.wire_bw_bytes_s = wire_bw_bytes_s
         self.dst: dict[str, Any] = {}
         self.executed_bytes = 0
+        # bytes that physically crossed the (possibly emulated) wire:
+        # quantized payload + sidecar for compressed batches, raw bytes for
+        # lossless ones; on-device relayouts cross no wire and count zero
+        self.wire_bytes = 0
         self.generic_cells = 0  # cells that fell off the row-merge fast path
         # blocking time spent in staging backpressure — drain-side wall
         # clock; the engine subtracts its delta from the loop time so
@@ -402,6 +473,14 @@ class LiveExecutor:
         """Destination tensors this round dispatched writes into."""
         return set(self._round_touched)
 
+    def _emulate_wire(self, nbytes: int) -> None:
+        """Account a wire crossing; block for its emulated transfer time."""
+        self.wire_bytes += nbytes
+        if self.wire_bw_bytes_s:
+            import time
+
+            time.sleep(nbytes / self.wire_bw_bytes_s)
+
     def _stage(self, buf):
         """Track a staged buffer, keeping at most two pinned (double
         buffering). Beyond that the oldest is waited on and dereferenced;
@@ -497,6 +576,7 @@ class LiveExecutor:
             self._stage(self.dst[name])
             self._no_release.add(name)
             self.executed_bytes += spec.nbytes
+            self._emulate_wire(spec.nbytes)  # scalars are always lossless
             return
         # classified routing: same-rank cells ("local" relayouts, plus the
         # rare resident cell sharing a layer with moved regions) can take
@@ -571,18 +651,48 @@ class LiveExecutor:
         self._stage(self.dst[name])
         self.executed_bytes += cell.nbytes
 
+    def _wire_format(self, name: str) -> str:
+        if self.wire_policy is None or not self.fused:
+            return "none"
+        return self.wire_policy.format_for(self.specs[name].collection)
+
     def _move_rows(self, name: str, rows: list[int]) -> None:
         jnp, jax = self._jnp, self._jax
         spec = self.specs[name]
         leaf = self.src[name]
         tail = spec.shape[1:]
         per_row = spec.nbytes // spec.shape[0]
+        fmt = self._wire_format(name)
+        if fmt != "none":
+            # one sidecar float32 scale per row-tile rides with the payload
+            row_elems = int(math.prod(tail)) if tail else 1
+            wire_per_row = row_elems + 4
+        else:
+            wire_per_row = per_row
         carry = self._dst_carry(name)
-        max_rows = rows_per_budget(per_row, self.staging_bytes)
+        # the staging budget bounds wire bytes — what is physically staged —
+        # so a quantized tensor packs ~4x more logical rows per batch
+        max_rows = rows_per_budget(wire_per_row, self.staging_bytes)
         for i in range(0, len(rows), max_rows):
             batch = rows[i : i + max_rows]
             runs = _runs(batch)
-            if len(runs) == 1:
+            if fmt != "none":
+                # compressed wire path: pack-quantize on the source mesh
+                # (payload + sidecar scales), stage the small buffers, then
+                # one fused dequant + overwrite-scatter into the donated
+                # carry. Used for contiguous runs too — the wire transfer,
+                # not the dispatch count, is what compression shrinks.
+                starts = jnp.asarray(batch, jnp.int32)
+                qbuf, scales = _PACKQ2D(leaf, starts, fmt)
+                qbuf = jax.device_put(qbuf, self._replicated_sh)
+                scales = jax.device_put(scales, self._replicated_sh)
+                starts_dev = jax.device_put(starts, self._replicated_sh)
+                carry = _dequant_scatter_fn(self.target_shardings[name])(
+                    carry, qbuf, scales, starts_dev
+                )
+                self._stage(qbuf)
+                self._emulate_wire(wire_per_row * len(batch))
+            elif len(runs) == 1:
                 lo, hi = runs[0]
                 chunk_shape = (hi - lo,) + tail
                 chunk = jax.device_put(
@@ -625,6 +735,8 @@ class LiveExecutor:
                     carry = _DUS0(carry, chunk, lo)
                     off += k
             self.executed_bytes += per_row * len(batch)
+            if fmt == "none":
+                self._emulate_wire(per_row * len(batch))
         self.dst[name] = carry
 
     def _move_cell(self, name: str, cell: TransferTask) -> None:
@@ -639,6 +751,8 @@ class LiveExecutor:
         self.dst[name] = _DUS_ND(carry, chunk, starts)
         self._stage(chunk)
         self.executed_bytes += cell.nbytes
+        # the generic fallback stays lossless regardless of policy
+        self._emulate_wire(cell.nbytes)
 
     # -- results --------------------------------------------------------
     def results(self) -> dict[str, Any]:

@@ -93,15 +93,20 @@ class OverlapSession:
         src_leaves: dict[str, Any],
         target_shardings: dict[str, Any],
         staging_bytes: int,
-        stream_k: int = 4,
+        stream_k: int = 4,  # documented fallback; autotune picks per-window
         max_inflight_rounds: int = 2,
+        wire_policy=None,
+        wire_bw_bytes_s: float | None = None,
     ):
         self.spec_map = {s.name: s for s in specs}
         self.plan = plan
         self.executor = LiveExecutor(
-            self.spec_map, src_leaves, target_shardings, staging_bytes
+            self.spec_map, src_leaves, target_shardings, staging_bytes,
+            wire_policy=wire_policy, wire_bw_bytes_s=wire_bw_bytes_s,
         )
-        self.engine = ReshardEngine(plan, self.executor, staging_bytes)
+        self.engine = ReshardEngine(
+            plan, self.executor, staging_bytes, wire_policy=wire_policy
+        )
         self.stream_k = max(1, stream_k)
         self.max_inflight_rounds = max(1, max_inflight_rounds)
         # fully-resident layers never enter the pre-copy schedule: their
@@ -167,6 +172,12 @@ class OverlapSession:
                 continue
             spec = self.spec_map.get(name)
             if spec is None or tuple(leaf.shape) != tuple(spec.shape):
+                continue
+            if getattr(leaf, "is_deleted", None) and leaf.is_deleted():
+                # a superseded carry can be a zero-copy alias of a live
+                # leaf (resident pass-through) that a donating train step
+                # has since consumed — unadoptable, so its layers simply
+                # re-stream
                 continue
             if _layout_agrees(sh_old, sh_new, tuple(leaf.shape)):
                 self.executor.dst[name] = leaf
@@ -259,7 +270,13 @@ class OverlapSession:
             self.streamed_at[l] = step
         self.report.precopy_rounds += 1
         self.report.precopy_bytes += s.network_bytes + s.local_bytes
+        # skipped bytes accrue per resident CELL — partially-resident layers
+        # contribute here without counting in resident_layers (the
+        # skipped_bytes ⟺ resident_cells identity, core/records.py)
         self.report.skipped_bytes += s.resident_bytes
+        self.report.resident_cells += s.resident_cells
+        self.report.logical_bytes += s.logical_bytes
+        self.report.wire_bytes += s.wire_bytes
         self.report.precopy_seconds += dispatch_dt + drain_dt
         # the engine self-reports pure dispatch; staging backpressure hit
         # inside its loop belongs on the drain side
@@ -307,6 +324,9 @@ class OverlapSession:
         self.report.resync_layers += len(layers)
         self.report.resync_bytes += s.network_bytes + s.local_bytes
         self.report.skipped_bytes += s.resident_bytes
+        self.report.resident_cells += s.resident_cells
+        self.report.logical_bytes += s.logical_bytes
+        self.report.wire_bytes += s.wire_bytes
         self.report.resync_seconds += dispatch_dt + drain_dt
         self.report.dispatch_seconds += s.dispatch_seconds
         self.report.drain_seconds += drain_dt + max(

@@ -41,8 +41,9 @@ RESHAPE_PARITY_TOL = 1e-2
 # bare `from hypothesis import given` breaks collection of three modules.
 # When the real package is absent we register a minimal deterministic stand-in
 # that degrades each @given property to a seeded sample sweep (same API
-# surface the tests use: given/settings/strategies.{integers,sampled_from,
-# builds,lists,data}). With hypothesis installed this block is inert.
+# surface the tests use: given/settings/strategies.{integers,floats,
+# sampled_from,builds,lists,data}). With hypothesis installed this block
+# is inert.
 # ---------------------------------------------------------------------------
 
 try:  # pragma: no cover - exercised implicitly by collection
@@ -66,6 +67,13 @@ except ImportError:
 
         def sample(self, rng):
             return int(rng.integers(self.lo, self.hi + 1))
+
+    class _Floats(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng):
+            return float(rng.uniform(self.lo, self.hi))
 
     class _Builds(_Strategy):
         def __init__(self, target, **kw):
@@ -133,6 +141,7 @@ except ImportError:
     _st = types.ModuleType("hypothesis.strategies")
     _st.sampled_from = _SampledFrom
     _st.integers = _Integers
+    _st.floats = _Floats
     _st.builds = _Builds
     _st.lists = _Lists
     _st.data = _Data

@@ -153,7 +153,7 @@ def test_mock_warmup_abstract_mesh(subproc):
 
 
 def test_grad_compression_int8_ef():
-    from repro.distribution.compress import (
+    from repro.kernels.reshard_quant import (
         compress_decompress_with_ef,
         dequantize_int8,
         quantize_int8,

@@ -1,0 +1,86 @@
+"""Regression: the reuse-accounting identity on partially-resident plans.
+
+BENCH_goodput.json once reported ``skipped_bytes: 12800`` next to
+``resident_layers: 0`` — not a bug in the byte counter but in the identity
+readers assumed: ``skipped_bytes`` accrues per resident CELL, and a
+dp-grow plan has many resident cells in layers that are not FULLY
+resident. The fixed invariant is cell-level (``reuse_identity_ok``,
+core/records.py) and must hold on every record the stack emits."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs.base import ParallelConfig
+from repro.core.intersection import plan_transfer
+from repro.core.records import ReuseRecordMixin, reuse_identity_ok
+from repro.core.resource_view import TensorSpec
+from repro.core.streaming import (
+    allocate_destination,
+    execute_plan,
+    materialize_rank,
+)
+
+SPECS = [
+    TensorSpec("params/blocks/pos0/w", (8, 16, 32), "float32",
+               ("pp", "none", "tp"), "stages", "params"),
+    TensorSpec("params/embed/tok", (64, 32), "float32", ("tp", "none"),
+               "first", "params"),
+    TensorSpec("mu/blocks/pos0/w", (8, 16, 32), "float32",
+               ("pp", "none", "tp"), "stages", "mu"),
+]
+
+
+def _run(ca, cb):
+    plan = plan_transfer(SPECS, ca, cb, num_positions=1)
+    rng = np.random.default_rng(0)
+    g = {s.name: rng.normal(size=s.shape).astype(s.dtype) for s in SPECS}
+    src = {r: materialize_rank(SPECS, ca, r, g) for r in range(ca.world_size)}
+    dst = {r: allocate_destination(SPECS, cb, r) for r in range(cb.world_size)}
+    return plan, execute_plan(plan, src, dst, staging_bytes=2048)
+
+
+def test_partial_residency_skips_bytes_with_zero_resident_layers():
+    """The regression shape itself: dp1tp4 -> dp2tp4 keeps every source
+    cell in place on the surviving replica (resident cells, skipped bytes)
+    yet fans each layer out to a new replica too — so NO layer is fully
+    resident. resident_layers == 0 with skipped_bytes > 0 is correct, and
+    the cell-level identity is what must hold instead."""
+    plan, stats = _run(ParallelConfig(dp=1, tp=4), ParallelConfig(dp=2, tp=4))
+    assert plan.resident_bytes > 0
+    assert plan.resident_layers() == []  # every layer only PARTIALLY resident
+    assert stats.resident_bytes == plan.resident_bytes
+    assert stats.resident_cells > 0
+    assert (stats.resident_bytes > 0) == (stats.resident_cells > 0)
+
+
+def test_identity_across_transition_sweep():
+    """Every transition — no residency, partial residency, full residency —
+    satisfies the cell-level identity on the engine's StreamStats."""
+    for ca, cb in [
+        (ParallelConfig(dp=2, tp=2), ParallelConfig(dp=1, tp=4)),  # none
+        (ParallelConfig(dp=1, tp=4), ParallelConfig(dp=2, tp=4)),  # partial
+        (ParallelConfig(dp=2, tp=2), ParallelConfig(dp=1, tp=2)),  # full
+        (ParallelConfig(pp=2, tp=2), ParallelConfig(pp=1, tp=4)),  # none
+    ]:
+        plan, stats = _run(ca, cb)
+        assert (stats.resident_bytes > 0) == (stats.resident_cells > 0), (ca, cb)
+        # and the identity as records downstream will carry it
+        rec = ReuseRecordMixin(
+            skipped_bytes=stats.resident_bytes,
+            resident_cells=stats.resident_cells,
+            resident_layers=len(plan.resident_layers()),
+        )
+        assert reuse_identity_ok(rec)
+        assert reuse_identity_ok(
+            {"skipped_bytes": rec.skipped_bytes,
+             "resident_cells": rec.resident_cells}
+        )
+
+
+def test_reuse_identity_ok_flags_the_original_bug():
+    assert not reuse_identity_ok(
+        {"skipped_bytes": 12800, "resident_cells": 0}
+    )
+    assert not reuse_identity_ok(ReuseRecordMixin(skipped_bytes=12800))
+    assert reuse_identity_ok(ReuseRecordMixin())

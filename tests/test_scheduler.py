@@ -144,13 +144,14 @@ class FakeController:
         self.world = SimpleNamespace(parallel=target, timings={})
         self._inflight = None
 
-    def request_resize(self, target, overlap=None):
+    def request_resize(self, target, overlap=None, operating_point=None):
         assert self._inflight is None
         self._gen += 1
+        self.last_operating_point = operating_point
         self._inflight = (self._gen, target, overlap, self.steps_to_commit)
         return self._gen
 
-    def retarget_resize(self, target, overlap=None):
+    def retarget_resize(self, target, overlap=None, operating_point=None):
         gen, old_target, mode, _ = self._inflight
         self.records.append(
             ReconfigRecord(
@@ -159,7 +160,9 @@ class FakeController:
             )
         )
         self._inflight = None
-        return self.request_resize(target, overlap=overlap)
+        return self.request_resize(
+            target, overlap=overlap, operating_point=operating_point
+        )
 
     def cancel_resize(self, outcome=None):
         if outcome is not None and self._inflight is not None:

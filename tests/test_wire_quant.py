@@ -1,0 +1,338 @@
+"""Compressed wire format: quantize-on-the-wire kernels vs jnp oracles,
+round-trip error bounds, wire-byte accounting, and the operating-point
+tuner's monotonicity (DESIGN.md §14)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.reshard_quant import (
+    FP8_E4M3_MAX,
+    WIRE_QMAX,
+    dequant_scatter_rows_pallas,
+    pack_quant_rows_pallas,
+)
+from repro.reshard.autotune import (
+    FALLBACK,
+    FALLBACK_STREAM_K,
+    OperatingPoint,
+    tune_operating_point,
+)
+from repro.reshard.engine import DEFAULT_STAGING_BYTES
+from repro.reshard.wire import (
+    SIDECAR_BYTES_PER_TILE,
+    WirePolicy,
+    wire_nbytes,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+def _starts(data, nb, blocks, block):
+    picks = data.draw(
+        st.lists(st.integers(0, blocks - 1), min_size=nb, max_size=nb,
+                 unique=True)
+    )
+    return jnp.asarray([s * block for s in picks], jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# pack_quant_rows: interpret-mode kernel vs oracle, error bound
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_pack_quant_rows_property(data):
+    """Pallas (interpret) == jnp oracle bit-for-bit on payload AND sidecar,
+    and the per-tile symmetric-quant error bound |x - deq| <= scale/2
+    holds for int8 (fp8 is format-rounded, checked at a looser bound)."""
+    fmt = data.draw(st.sampled_from(["int8", "fp8_e4m3"]))
+    dtype = data.draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    nb = data.draw(st.integers(1, 6))
+    block = data.draw(st.sampled_from([1, 8]))
+    R = block * data.draw(st.integers(max(nb, 2), 12))
+    starts = _starts(data, nb, R // block, block)
+    src = _rand((R, 128), dtype)
+
+    q_p, s_p = pack_quant_rows_pallas(src, starts, block, fmt, interpret=True)
+    q_r, s_r = ref.pack_quant_rows_ref(src, starts, block, fmt)
+    np.testing.assert_array_equal(np.asarray(q_p), np.asarray(q_r))
+    np.testing.assert_array_equal(np.asarray(s_p), np.asarray(s_r))
+
+    # round-trip error bound per tile: int8 round-to-nearest stays within
+    # scale/2 absolute; fp8-e4m3 (3 mantissa bits) within a half-ulp of
+    # the VALUE (2^-4 relative) plus a sub-normal absolute floor
+    scales = np.asarray(s_r, np.float32).reshape(nb)
+    deq = np.asarray(q_r, np.float32).reshape(nb, block, 128) * scales[
+        :, None, None
+    ]
+    x = np.stack(
+        [np.asarray(src[s : s + block], np.float32) for s in np.asarray(starts)]
+    )
+    err = np.abs(x - deq)
+    s3 = scales[:, None, None]
+    if fmt == "int8":
+        assert (err <= 0.5 * s3 * (1 + 1e-6)).all()
+    else:
+        assert (err <= 0.0625 * np.abs(x) + 0.01 * s3).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(data=st.data())
+def test_dequant_scatter_rows_property(data):
+    """Dequant-scatter (interpret) == oracle, preserves every destination
+    row not named by the offset table, and composes with pack_quant as a
+    bounded-error round trip."""
+    fmt = data.draw(st.sampled_from(["int8", "fp8_e4m3"]))
+    dtype = data.draw(st.sampled_from([jnp.float32, jnp.bfloat16]))
+    nb = data.draw(st.integers(1, 6))
+    block = data.draw(st.sampled_from([1, 8]))
+    R = block * data.draw(st.integers(max(nb, 2), 12))
+    starts = _starts(data, nb, R // block, block)
+    src = _rand((R, 128), dtype)
+    dst = _rand((R, 128), dtype)
+
+    q, scales = ref.pack_quant_rows_ref(src, starts, block, fmt)
+    out_p = dequant_scatter_rows_pallas(
+        dst, q, scales, starts, block, interpret=True
+    )
+    out_r = ref.dequant_scatter_rows_ref(dst, q, scales, starts, block)
+    np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_r))
+
+    named = np.zeros(R, bool)
+    for s in np.asarray(starts):
+        named[s : s + block] = True
+    np.testing.assert_array_equal(
+        np.asarray(out_p)[~named], np.asarray(dst)[~named]
+    )
+    # bounded-error round trip on the named rows (gathered in starts order
+    # so each row lines up with its tile's sidecar scale): quantization
+    # error plus the destination-dtype cast (bf16 adds 2^-8 relative)
+    x = np.concatenate(
+        [np.asarray(src[s : s + block], np.float32) for s in np.asarray(starts)]
+    )
+    err = np.abs(
+        np.concatenate(
+            [
+                np.asarray(out_p[s : s + block], np.float32)
+                for s in np.asarray(starts)
+            ]
+        )
+        - x
+    )
+    s = np.repeat(np.asarray(scales, np.float32).reshape(nb), block)[:, None]
+    if fmt == "int8":
+        assert (err <= 0.01 * np.abs(x) + 0.51 * s).all()
+    else:
+        assert (err <= 0.07 * np.abs(x) + 0.01 * s).all()
+
+
+def test_quant_stream_idempotent_and_deterministic():
+    """Quantize + dequant-scatter is a deterministic elementwise map: the
+    dirty-layer re-stream invariant (re-applying the same round produces
+    bitwise-identical destination bytes) survives compression."""
+    src = _rand((24, 128), jnp.bfloat16)
+    dst = _rand((24, 128), jnp.bfloat16)
+    starts = jnp.asarray([2, 7, 11, 21], jnp.int32)
+    for fmt in ("int8", "fp8_e4m3"):
+        q1, s1 = pack_quant_rows_pallas(src, starts, 1, fmt, interpret=True)
+        q2, s2 = pack_quant_rows_pallas(src, starts, 1, fmt, interpret=True)
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+        np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+        once = dequant_scatter_rows_pallas(dst, q1, s1, starts, 1, interpret=True)
+        twice = dequant_scatter_rows_pallas(once, q1, s1, starts, 1, interpret=True)
+        np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+@pytest.mark.parametrize("fmt", ["int8", "fp8_e4m3"])
+def test_quant_edge_tiles(fmt):
+    """All-zero tiles (scale floors at QUANT_EPS, dequant gives exact
+    zeros), denormal tiles, and max-magnitude bf16 tiles (scale maps the
+    absmax onto qmax without overflow) all survive the round trip."""
+    starts = jnp.asarray([0, 1, 2], jnp.int32)
+    zero = jnp.zeros((1, 128), jnp.float32)
+    denorm = jnp.full((1, 128), 1e-40, jnp.float32)
+    big = jnp.full((1, 128), 3.38e38, jnp.float32)  # ~max finite bf16
+    src = jnp.concatenate([zero, denorm, big])
+
+    q, scales = pack_quant_rows_pallas(src, starts, 1, fmt, interpret=True)
+    q_r, s_r = ref.pack_quant_rows_ref(src, starts, 1, fmt)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q_r))
+    np.testing.assert_array_equal(np.asarray(scales), np.asarray(s_r))
+    assert np.isfinite(np.asarray(scales)).all()
+
+    out = dequant_scatter_rows_pallas(
+        jnp.ones_like(src), q, scales, starts, 1, interpret=True
+    )
+    out = np.asarray(out, np.float32)
+    np.testing.assert_array_equal(out[0], np.zeros(128))  # exact zeros
+    assert np.isfinite(out).all()  # no inf/nan from denormal or max tiles
+    qmax = WIRE_QMAX[fmt]
+    np.testing.assert_allclose(out[2], np.asarray(big[0]), rtol=1.5 / qmax)
+
+
+def test_fp8_constant_matches_dtype():
+    assert float(jnp.finfo(jnp.float8_e4m3fn).max) == FP8_E4M3_MAX
+
+
+# ---------------------------------------------------------------------------
+# wire-byte accounting
+# ---------------------------------------------------------------------------
+
+
+class _Task:
+    def __init__(self, collection, shape, nbytes, kind="remote"):
+        self.collection = collection
+        self._shape = shape
+        self.nbytes = nbytes
+        self.kind = kind
+
+    def shape(self):
+        return self._shape
+
+
+def test_wire_policy_nbytes():
+    pol = WirePolicy()  # moments int8, params lossless
+    mu = _Task("mu", (64, 128), 64 * 128 * 4)
+    assert wire_nbytes(pol, mu) == 64 * 128 + 64 * SIDECAR_BYTES_PER_TILE
+    par = _Task("params", (64, 128), 64 * 128 * 4)
+    assert wire_nbytes(pol, par) == par.nbytes  # lossless by default
+    step = _Task("step", (), 8)
+    assert wire_nbytes(pol, step) == 8  # scalars always lossless
+    local = _Task("mu", (64, 128), 64 * 128 * 4, kind="local")
+    assert wire_nbytes(pol, local) == local.nbytes  # relayouts never quantize
+    assert wire_nbytes(None, mu) == mu.nbytes  # None policy == lossless
+
+    assert (
+        WirePolicy(params="fp8_e4m3").wire_nbytes(par)
+        == 64 * 128 + 64 * SIDECAR_BYTES_PER_TILE
+    )
+    with pytest.raises(ValueError):
+        WirePolicy(moments="int4")
+
+
+def test_chunk_budget_counts_wire_bytes():
+    """The staging budget bounds what is physically staged: a quantized
+    task packs ~4x more logical rows per chunk than its lossless self."""
+    from repro.core.intersection import TransferTask
+    from repro.reshard.chunking import chunk_task
+
+    t = TransferTask(
+        tensor="mu/x", collection="mu", src_rank=0, dst_rank=1,
+        bounds=((0, 64), (0, 128)), src_offset=(0, 0), dst_offset=(0, 0),
+        nbytes=64 * 128 * 4, layer=0,
+    )
+    budget = 16 * (128 + SIDECAR_BYTES_PER_TILE)  # 16 quantized rows
+    lossless = chunk_task(t, budget, None)
+    quant = chunk_task(t, budget, WirePolicy())
+    assert len(quant) < len(lossless)
+    for chunks in (lossless, quant):
+        assert sum(c.nbytes for c in chunks) == t.nbytes  # logical preserved
+    assert all(
+        wire_nbytes(WirePolicy(), c) <= budget for c in quant
+    )
+
+
+def test_engine_sim_prices_wire_vs_logical_bytes():
+    """End-to-end through the sim oracle: wire_bytes ~ logical/4 under the
+    default policy (moments int8, params lossless stay 1:1), destination
+    bytes for params are exact, and the lossless run reports wire ==
+    logical."""
+    import numpy as np
+    from repro.configs.base import ParallelConfig
+    from repro.core.intersection import plan_transfer
+    from repro.core.resource_view import TensorSpec
+    from repro.core.streaming import (
+        allocate_destination,
+        execute_plan,
+        materialize_rank,
+    )
+
+    specs = [
+        TensorSpec("params/blocks/pos0/w", (8, 16, 32), "float32",
+                   ("pp", "none", "tp"), "stages", "params"),
+        TensorSpec("mu/blocks/pos0/w", (8, 16, 32), "float32",
+                   ("pp", "none", "tp"), "stages", "mu"),
+    ]
+    ca, cb = ParallelConfig(dp=2, tp=2), ParallelConfig(dp=1, tp=4)
+    plan = plan_transfer(specs, ca, cb, num_positions=1)
+    rng = np.random.default_rng(0)
+    g = {s.name: rng.normal(size=s.shape).astype(s.dtype) for s in specs}
+
+    def run(policy):
+        src = {r: materialize_rank(specs, ca, r, g) for r in range(ca.world_size)}
+        dst = {r: allocate_destination(specs, cb, r) for r in range(cb.world_size)}
+        return execute_plan(plan, src, dst, staging_bytes=2048,
+                            wire_policy=policy), dst
+
+    s_none, _ = run(None)
+    assert s_none.wire_bytes == s_none.logical_bytes == s_none.network_bytes
+
+    s_q, dst = run(WirePolicy())
+    assert s_q.logical_bytes == s_none.logical_bytes  # plan unchanged
+    assert s_q.wire_bytes < s_q.logical_bytes  # moments shrank on the wire
+    # params stayed lossless: their destination shards are byte-exact
+    for r, store in dst.items():
+        if "params/blocks/pos0/w" in store.shards:
+            got = store.shards["params/blocks/pos0/w"]
+            from repro.core.resource_view import view_of
+
+            v = view_of(specs[0], cb, r)
+            sl = tuple(slice(lo, hi) for lo, hi in v.bounds)
+            np.testing.assert_array_equal(got, g["params/blocks/pos0/w"][sl])
+
+
+# ---------------------------------------------------------------------------
+# operating-point tuner
+# ---------------------------------------------------------------------------
+
+
+def test_tuner_fallback_without_bandwidth():
+    for bw in (None, 0.0, -1.0):
+        assert tune_operating_point(1 << 30, 10, 30.0, bw) == FALLBACK
+    assert FALLBACK.stream_k == FALLBACK_STREAM_K
+    assert FALLBACK.staging_bytes == DEFAULT_STAGING_BYTES
+    assert FALLBACK.source == "fallback"
+    # degenerate plans never tune either
+    assert tune_operating_point(0, 10, 30.0, 1e9).source == "fallback"
+    assert tune_operating_point(1 << 20, 0, 30.0, 1e9).source == "fallback"
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    plan_mb=st.integers(1, 4096),
+    layers=st.integers(1, 64),
+    w1=st.floats(0.0, 600.0),
+    w2=st.floats(0.0, 600.0),
+    bw_mb=st.floats(1.0, 1e5),
+)
+def test_tuner_monotone_in_window(plan_mb, layers, w1, w2, bw_mb):
+    """At fixed plan bytes and bandwidth, stream_k and chunk size are
+    monotone non-decreasing in the warning window — a wider window never
+    buys a *smaller* round or chunk."""
+    lo, hi = sorted((w1, w2))
+    a = tune_operating_point(plan_mb << 20, layers, lo, bw_mb * 1e6)
+    b = tune_operating_point(plan_mb << 20, layers, hi, bw_mb * 1e6)
+    assert a.source == b.source == "measured"
+    assert a.stream_k <= b.stream_k
+    assert a.chunk_bytes <= b.chunk_bytes
+    # bounds every point must respect
+    for op in (a, b):
+        assert 1 <= op.stream_k <= layers
+        assert op.chunk_bytes <= op.staging_bytes <= DEFAULT_STAGING_BYTES
+
+
+def test_operating_point_to_dict_roundtrip():
+    op = tune_operating_point(100 << 20, 10, 30.0, 50e6)
+    d = op.to_dict()
+    assert OperatingPoint(**d) == op
+    assert d["source"] == "measured"
