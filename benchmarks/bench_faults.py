@@ -1,0 +1,122 @@
+"""Fault-injection matrix for peer recovery (DESIGN.md §15).
+
+Kills device subsets at every phase of the reconfiguration lifecycle —
+idle boundary, mid-stream (pre-copy layers outstanding), mid-commit
+(split-step switch armed) — crossed with both redundancy schemes:
+
+* **dp-donor**: dp=2 world loses a whole replica's devices; surviving DP
+  peers donate the dead ranks' shards over the recovery stream.
+* **dp1-parity**: dp=1 world loses a tp-shard owner whose bytes exist
+  nowhere else; the idle-boundary XOR parity word reconstructs them.
+
+Every cell of the matrix must end ``peer_recover``/``committed`` with the
+step preserved (no rollback) and training live afterwards. Results land in
+``results/BENCH_faults.json``; ``--check`` exits nonzero when any cell
+demoted to the checkpoint rung, rolled the step back, or failed to train
+after recovery.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.common import emit, run_with_devices, write_results
+
+_SNIPPET = """
+import json, time
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig
+from repro.core.controller import LiveRController
+from repro.elastic import FaultInjector
+from repro.optim import AdamWConfig
+
+SMOKE = __SMOKE__
+cfg = get_config("qwen3-1.7b").reduced()
+PHASES = ("idle", "mid_stream", "mid_commit")
+
+SCHEMES = {
+    # scheme -> (start topology, parity_every, resize during which to kill,
+    #            post-failure target, lost ranks)
+    "dp_donor": (ParallelConfig(dp=2, tp=2), 0, ParallelConfig(dp=4, tp=2),
+                 ParallelConfig(dp=1, tp=2), (2, 3)),
+    "dp1_parity": (ParallelConfig(dp=1, tp=2), 1, ParallelConfig(dp=1, tp=4),
+                   ParallelConfig(dp=1, tp=1), (1,)),
+}
+
+cells = []
+for scheme, (src, parity_every, mid, target, lost) in SCHEMES.items():
+    for phase in PHASES:
+        ctrl = LiveRController(
+            cfg, src, AdamWConfig(learning_rate=1e-3),
+            seq_len=16, global_batch=4, ckpt_dir=None,
+            parity_every=parity_every,
+            overlap="stream", stream_k=1, sync_compile=True,
+        )
+        ctrl.train_steps(3)
+        inj = FaultInjector(ctrl)
+        t0 = time.perf_counter()
+        rep = inj.inject(phase, target, lost_ranks=lost, resize_target=mid)
+        wall = time.perf_counter() - t0
+        ctrl.train_steps(2)  # liveness after recovery
+        cells.append({
+            "scheme": scheme, "phase": rep.phase,
+            "lost_ranks": list(rep.lost_ranks),
+            "mode": rep.mode, "outcome": rep.outcome,
+            "demoted": rep.demoted,
+            "step_before": rep.step_before, "step_after": rep.step_after,
+            "donors": rep.donors, "parity_bytes": rep.parity_bytes,
+            "pause_s": rep.pause_s, "wall_s": wall,
+            "post_world": ctrl.world.parallel.describe(),
+            "post_step": ctrl.step,
+        })
+print("JSON " + json.dumps({"cells": cells}))
+"""
+
+
+def main(argv=()) -> None:
+    smoke = "--smoke" in argv
+    check = "--check" in argv
+    code = _SNIPPET.replace("__SMOKE__", repr(smoke))
+    out = run_with_devices(code, n_devices=8, timeout=1800)
+    payload = None
+    for line in out.splitlines():
+        if line.startswith("JSON "):
+            payload = json.loads(line[5:])
+    assert payload is not None, f"no JSON payload in bench output:\n{out[-2000:]}"
+
+    path = write_results("faults", payload, mode="smoke" if smoke else "full")
+
+    cells = payload["cells"]
+    for c in cells:
+        emit(
+            f"faults/{c['scheme']}/{c['phase']}", c["pause_s"] * 1e6,
+            f"mode={c['mode']};outcome={c['outcome']};donors={c['donors']};"
+            f"parity_bytes={c['parity_bytes']};"
+            f"step={c['step_before']}->{c['step_after']}",
+        )
+    emit("faults/json", 0.0, path)
+
+    if check:
+        bad = [
+            c for c in cells
+            if c["mode"] != "peer_recover" or c["outcome"] != "committed"
+        ]
+        if bad:
+            raise SystemExit(f"cells demoted or failed: {bad}")
+        rolled = [c for c in cells if c["step_after"] != c["step_before"]]
+        if rolled:
+            raise SystemExit(f"cells rolled the step back: {rolled}")
+        schemes = {c["scheme"] for c in cells}
+        phases = {c["phase"] for c in cells}
+        if len(cells) < len(schemes) * 3 or phases != {
+            "idle", "mid_stream", "mid_commit"
+        }:
+            raise SystemExit(f"matrix incomplete: {sorted(phases)}")
+        parity_cells = [c for c in cells if c["scheme"] == "dp1_parity"]
+        if not any(c["parity_bytes"] > 0 for c in parity_cells):
+            raise SystemExit("dp1_parity cells never used the parity word")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -22,11 +22,14 @@ rung.
 
 ``--smoke`` replays a fixed 8-event trace exercising every rung of the
 fallback lattice (compression-promoted stream commit, retarget, coalesce,
-too-short-window checkpoint fallback, unannounced fail-stop, stream
-commit, tp-preserving shrink that classifies fully resident); ``--check``
-exits nonzero unless the scheduler replayed >= 5 events with zero
-``aborted`` outcomes, at least one resize was served warm from the pool,
-warm prepare beat cold by >= 5x, at least one record reports
+zero-window peer recovery, unannounced fail-stop recovered from peer
+replicas, stream commit, tp-preserving shrink that classifies fully
+resident); ``--check`` exits nonzero unless the scheduler replayed >= 5
+events with zero ``aborted`` outcomes AND zero ``fell_back`` outcomes (no
+event may touch the demoted checkpoint rung, DESIGN.md §15), the
+fail-stop's recovery pause lands within 5x of the worst streamed resize
+commit pause, at least one resize was served warm from the pool, warm
+prepare beat cold by >= 5x, at least one record reports
 ``reused_layers > 0`` (the delta plan IR skipped in-place layers), every
 record satisfies the cell-level reuse identity (``reuse_identity_ok``),
 and at least one committed stream event was rung-promoted by the
@@ -65,16 +68,19 @@ ctrl = LiveRController(
     cfg, ParallelConfig(dp=2, tp=2), AdamWConfig(learning_rate=1e-3),
     seq_len=32, global_batch=8, ckpt_dir=tempfile.mkdtemp(prefix="goodput_"),
     ckpt_interval=2, overlap="stream", stream_k=2, sync_compile=SMOKE,
-    world_pool=WorldPool(capacity=3),
+    world_pool=WorldPool(capacity=4),
     # compressed wire format (DESIGN.md §14): optimizer moments cross the
     # wire int8-quantized, params stay lossless
     wire_policy=WirePolicy(),
 )
-# warm-up: compile amortized, a durable checkpoint on disk (the fail-stop
-# rung needs one), and iteration_times seeded for the deadline estimator
+# warm-up: compile amortized, a durable checkpoint on disk (last-resort
+# rung only — the gate below requires it stays untouched), and
+# iteration_times seeded for the deadline estimator
 ctrl.train_steps(4)
 
-BIG = 1e9
+# planned resizes with no deadline pressure at all: the window arithmetic
+# is inf-safe end to end and serializes as the string "inf"
+BIG = float("inf")
 SAFETY = 1.25  # ElasticScheduler default
 if SMOKE:
     # calibrate an emulated wire + a finite warning window so that ONE
@@ -110,9 +116,10 @@ if SMOKE:
     # decisions (windows at the extremes, plus the one calibrated
     # promotion window), deterministic replay (sync_prepare):
     # compression-promoted stream commit, mid-prepare retarget, coalesce,
-    # zero-window checkpoint fallback, unannounced fail-stop, stream
-    # commit, and a final tp-preserving shrink whose plan classifies
-    # fully resident (delta IR: layer reuse, near-zero bytes moved)
+    # zero-window peer recovery (no checkpoint), unannounced fail-stop
+    # recovered from surviving DP replicas, stream commit, and a final
+    # tp-preserving shrink whose plan classifies fully resident (delta
+    # IR: layer reuse, near-zero bytes moved)
     events = [
         # the calibrated window: wide enough for the wire-priced stream
         # estimate, too tight for its lossless counterfactual -> the
@@ -127,10 +134,16 @@ if SMOKE:
         ResizeEvent(time_s=12.5, target=ParallelConfig(dp=2, tp=4), warning_s=BIG),
         ResizeEvent(time_s=12.6, target=ParallelConfig(dp=1, tp=4), warning_s=BIG),
         ResizeEvent(time_s=12.7, target=ParallelConfig(dp=1, tp=4), warning_s=BIG),
-        ResizeEvent(time_s=22.0, target=ParallelConfig(dp=2, tp=2), warning_s=0.0),
-        FailStopEvent(time_s=30.0, target=ParallelConfig(dp=1, tp=2)),
-        ResizeEvent(time_s=36.0, target=ParallelConfig(dp=2, tp=2), warning_s=BIG),
-        ResizeEvent(time_s=42.0, target=ParallelConfig(dp=1, tp=2), warning_s=BIG),
+        # the window-0 events sit one transfer-compile time after the
+        # preceding topology commit: the stream-ahead prewarm (§15) needs
+        # that long to warm the (new world -> pooled world) executables on
+        # host devices, and anything tighter measures XLA compile
+        # contention instead of the recovery path. Real event streams are
+        # minutes apart (ANALYTIC_SPACING) — this stays far conservative.
+        ResizeEvent(time_s=26.0, target=ParallelConfig(dp=2, tp=2), warning_s=0.0),
+        FailStopEvent(time_s=34.0, target=ParallelConfig(dp=1, tp=2)),
+        ResizeEvent(time_s=40.0, target=ParallelConfig(dp=2, tp=2), warning_s=BIG),
+        ResizeEvent(time_s=46.0, target=ParallelConfig(dp=1, tp=2), warning_s=BIG),
     ]
     time_scale, sync_prepare = 1.0, True
 else:
@@ -180,6 +193,11 @@ doc["measured"] = {
     "goodput": report.goodput,
     "pause_seconds": report.pause_seconds,
     "train_gpu_seconds": ctrl.ledger.gpu_seconds("train"),
+    # goodput denominator attribution: gpu-seconds per interval kind
+    "ledger": {
+        k: ctrl.ledger.gpu_seconds(k)
+        for k in ("train", "pause", "reshard_overlap")
+    },
     "steps": report.steps,
     "reconfig_records": [
         {"src": r.src, "dst": r.dst, "mode": r.mode, "outcome": r.outcome,
@@ -191,6 +209,9 @@ doc["measured"] = {
          "logical_bytes": getattr(r, "logical_bytes", 0),
          "operating_point": getattr(r, "operating_point", None),
          "moved_bytes": r.plan_network_bytes + r.plan_local_bytes,
+         "donors": getattr(r, "donors", 0),
+         "lost_devices": getattr(r, "lost_devices", 0),
+         "parity_bytes": getattr(r, "parity_bytes", 0),
          "warm_hit": r.warm_hit, "prepare_s": r.prepare_s,
          "prepare_source": r.prepare_source}
         for r in ctrl.records
@@ -280,8 +301,30 @@ def main(argv=()) -> None:
             raise SystemExit(f"trace too short: {n_events} events < 5")
         if counts["aborted"] != 0:
             raise SystemExit(f"{counts['aborted']} aborted events")
+        # peer-recovery gate (DESIGN.md §15): the checkpoint rung is
+        # last-resort only — nothing in the smoke trace may land on it
+        if counts.get("fell_back", 0) != 0:
+            raise SystemExit(
+                f"{counts['fell_back']} events fell back to the checkpoint "
+                "rung: peer recovery should have covered them"
+            )
         if counts["committed"] < 1:
             raise SystemExit("no event committed through the live path")
+        # fail-stop pause gate: recovering from peers must cost the same
+        # order as a streamed resize commit, not a disk restore
+        failstops = [e for e in payload["events"] if e["kind"] == "fail_stop"]
+        streamed = [
+            e["pause_s"] for e in payload["events"]
+            if e["outcome"] == "committed" and e["decision"] == "stream"
+        ]
+        if failstops and streamed:
+            worst_stream = max(streamed)
+            for e in failstops:
+                if e["pause_s"] > 5.0 * worst_stream:
+                    raise SystemExit(
+                        f"fail-stop pause {e['pause_s']:.3f}s exceeds 5x the "
+                        f"worst streamed commit pause {worst_stream:.3f}s"
+                    )
         if not (0.0 < meas["goodput"] <= 1.0):
             raise SystemExit(f"implausible measured goodput {meas['goodput']}")
         # warm pool gate: at least one resize must be served warm, and a

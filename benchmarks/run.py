@@ -27,6 +27,7 @@ BENCHES = [
     ("dataplane", "benchmarks.bench_dataplane"),
     ("delta", "benchmarks.bench_delta"),
     ("goodput", "benchmarks.bench_goodput"),
+    ("faults", "benchmarks.bench_faults"),
 ]
 
 

@@ -113,7 +113,9 @@ def main():
 
     if args.trace:
         ctrl.train_steps(4)  # warm-up: compile amortized, estimator seeded
-        ctrl.checkpoint_now()  # fail-stop events need a durable restore point
+        # last-resort rung only: fail-stops recover from surviving peers
+        # first (DESIGN.md §15); the checkpoint covers uncovered losses
+        ctrl.checkpoint_now()
         run_trace(ctrl, args.trace)
         return
 

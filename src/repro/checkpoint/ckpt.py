@@ -107,11 +107,12 @@ def load_checkpoint(
 
 class AsyncCheckpointer:
     """Overlapped checkpointing: snapshot-to-host inline (one tensor in
-    flight), disk write in a background daemon thread."""
+    flight), disk write in a background thread."""
 
     def __init__(self, ckpt_dir: str):
         self.ckpt_dir = ckpt_dir
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         self.last_save_seconds: Optional[float] = None
 
     def save(self, step: int, state: Any, extra: Optional[dict] = None) -> None:
@@ -124,27 +125,43 @@ class AsyncCheckpointer:
             t0 = time.perf_counter()
             step_dir = os.path.join(self.ckpt_dir, f"step_{step:08d}")
             tmp_dir = step_dir + ".tmp"
-            os.makedirs(tmp_dir, exist_ok=True)
-            manifest = {"step": step, "tensors": {}, "extra": extra or {}}
-            for path, arr in host.items():
-                fname = _sanitize(path) + ".npy"
-                np.save(os.path.join(tmp_dir, fname), arr)
-                manifest["tensors"][path] = {
-                    "shape": list(arr.shape),
-                    "dtype": str(arr.dtype),
-                    "file": fname,
-                }
-            with open(os.path.join(tmp_dir, MANIFEST), "w") as f:
-                json.dump(manifest, f)
-            if os.path.exists(step_dir):
-                shutil.rmtree(step_dir)
-            os.rename(tmp_dir, step_dir)
-            self.last_save_seconds = time.perf_counter() - t0
+            try:
+                os.makedirs(tmp_dir, exist_ok=True)
+                manifest = {"step": step, "tensors": {}, "extra": extra or {}}
+                for path, arr in host.items():
+                    fname = _sanitize(path) + ".npy"
+                    np.save(os.path.join(tmp_dir, fname), arr)
+                    manifest["tensors"][path] = {
+                        "shape": list(arr.shape),
+                        "dtype": str(arr.dtype),
+                        "file": fname,
+                    }
+                with open(os.path.join(tmp_dir, MANIFEST), "w") as f:
+                    json.dump(manifest, f)
+                if os.path.exists(step_dir):
+                    shutil.rmtree(step_dir)
+                os.rename(tmp_dir, step_dir)
+                self.last_save_seconds = time.perf_counter() - t0
+            except BaseException as e:  # surfaced at the next save()/wait()
+                self._error = e
+                shutil.rmtree(tmp_dir, ignore_errors=True)
 
-        self._thread = threading.Thread(target=_write, daemon=True)
+        # non-daemon: a daemon writer killed at interpreter exit leaves a
+        # truncated .tmp dir and no published step; Python joins
+        # non-daemon threads, so the atomic rename always completes
+        self._thread = threading.Thread(target=_write, daemon=False)
         self._thread.start()
 
     def wait(self) -> None:
+        """Join the in-flight write; re-raise its failure here (not in the
+        writer thread, where it would vanish). A raised error means the step
+        being written is NOT durable — an older published step_* may be."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError(
+                f"async checkpoint write to {self.ckpt_dir} failed; the "
+                "latest published step (if any) is older"
+            ) from err

@@ -18,7 +18,10 @@ and ``escalate_commit`` (deadline-pressure stop-copy).
 
 from __future__ import annotations
 
+import os
+import threading
 import time
+import traceback
 from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
@@ -66,7 +69,8 @@ class ReconfigRecord(ReuseRecordMixin):
     switch_s: float = 0.0
     total_pause_s: float = 0.0
     moved_bytes: int = 0
-    mode: str = "live"  # live | live_overlap | restart | ucp_restart | fallback
+    # live | live_overlap | restart | ucp_restart | peer_recover | fallback
+    mode: str = "live"
     # per-event disposition (DESIGN.md §10 fallback lattice):
     #   committed  — the reconfiguration completed via its requested path
     #   retargeted — superseded by a newer event before commit (its partial
@@ -106,6 +110,10 @@ class ReconfigRecord(ReuseRecordMixin):
     # the mixin; the tuned data-plane parameters this reconfig ran with
     # (None = the hand-set fallback constants, DESIGN.md §14)
     operating_point: Optional[dict] = None
+    # peer recovery (DESIGN.md §15): how a fail-stop was sourced
+    donors: int = 0  # distinct surviving ranks that donated cells
+    lost_devices: int = 0  # ranks lost to the failure
+    parity_bytes: int = 0  # bytes reconstructed from the XOR parity word
 
 
 class LiveRController:
@@ -133,6 +141,7 @@ class LiveRController:
         max_spec_builds: int = 1,
         wire_policy=None,
         wire_bw_bytes_s: float | None = None,
+        parity_every: int = 0,
     ):
         self.cfg = cfg
         self.opt_cfg = opt_cfg
@@ -189,6 +198,17 @@ class LiveRController:
         self.world_pool = world_pool
         self.max_spec_builds = max_spec_builds
         self._spec_builders: dict[tuple, ShadowBuilder] = {}
+        # transfer-executable prewarm (DESIGN.md §15): (src, dst) pairs
+        # whose reshard compiles already ran off the critical path
+        self._prewarmed_pairs: set = set()
+        self._prewarm_thread: Optional[threading.Thread] = None
+        self._prewarm_pair: Optional[tuple] = None
+        self._inflight_target: Optional[ParallelConfig] = None
+        # spare-shard scheme (DESIGN.md §15): refresh the XOR parity words
+        # every N idle step boundaries so dp=1 worlds can reconstruct a
+        # shard whose only owner died; 0 disables
+        self.parity_every = parity_every
+        self._parity = None
 
         # Active World (generation 0). With a pool, every world is built
         # split-step so its update_fn is already warm if it later serves a
@@ -328,6 +348,238 @@ class LiveRController:
         ).start()
         return True
 
+    @staticmethod
+    def _speculation_trace(msg: str) -> None:
+        """Append one line to the file named by REPRO_PREWARM_TRACE (unset:
+        no-op). Speculative threads swallow their failures by design — this
+        is the only way to see what the speculation layer actually did."""
+        path = os.environ.get("REPRO_PREWARM_TRACE")
+        if not path:
+            return
+        try:
+            with open(path, "a") as f:
+                f.write(f"{time.perf_counter():.3f} {msg}\n")
+        except OSError:
+            pass
+
+    def _derived_named_shardings(self, parallel: ParallelConfig) -> Optional[dict]:
+        """Named state shardings a world under ``parallel`` WILL carry,
+        derived from mesh + rules alone — no build, no compile (~ms).
+        Lets the stream-ahead prewarm (§15) start at resize-request time
+        instead of waiting for the shadow world. None when the layout
+        can't be derived cheaply (pipeline worlds shard via the pipeline
+        step builder)."""
+        if parallel.pp > 1:
+            return None
+        from repro.distribution.sharding import make_elastic_mesh
+        from repro.distribution.step import train_state_shardings
+
+        try:
+            mesh = make_elastic_mesh(parallel, devices=self.devices)
+            ps, os_ = train_state_shardings(self.cfg, mesh)
+        except BaseException:
+            return None
+        named = {}
+        for p, sh in tree_paths(ps).items():
+            named[f"params/{p}"] = sh
+        for coll in ("mu", "nu"):
+            for p, sh in tree_paths(os_[coll]).items():
+                named[f"{coll}/{p}"] = sh
+        return named
+
+    def prewarm_failover_ahead(self) -> int:
+        """During a resize, prewarm the transfer executables for
+        (incoming world → pooled world) pairs — the incoming world's
+        failover paths (§15). A window-0 event landing right after the
+        commit otherwise pays the pair's cold compiles inside its pause:
+        the pair is only knowable once the incoming world is, and that is
+        knowable the moment the resize is requested — the state shardings
+        it will carry are pure metadata (mesh + rules), no build needed.
+        Returns prewarm threads started (≤1; one pair per tick)."""
+        target = self._inflight_target
+        if target is None or self.world_pool is None:
+            return 0
+        # same policy as the idle-tick loop: non-growing pairs only,
+        # nearest size first (same-size retopology is the likeliest
+        # window-0 target; grows come with windows and stream)
+        needed = sorted(
+            (
+                key[1]
+                for key in self.world_pool.keys()
+                if key[1] != target
+                and key[1].world_size <= target.world_size
+                and (target, key[1]) not in self._prewarmed_pairs
+            ),
+            key=lambda p: target.world_size - p.world_size,
+        )
+        if not needed:
+            return 0
+        if self._prewarm_thread is not None and self._prewarm_thread.is_alive():
+            return 0
+        src_sh = self._derived_named_shardings(target)
+        if src_sh is None:
+            self._speculation_trace(f"ahead: no derived shardings for {target}")
+            return 0
+        started = 0
+        for tgt in needed:
+            if self.prewarm_transfer(
+                tgt, src_parallel=target, src_shardings=src_sh
+            ):
+                started += 1
+        return started
+
+    def prewarm_transfer(
+        self,
+        target: ParallelConfig,
+        src_parallel: Optional[ParallelConfig] = None,
+        src_shardings: Optional[dict] = None,
+    ) -> bool:
+        """Compile the reshard executables for (current world → target)
+        off the critical path, against a pooled world's shardings.
+
+        A fail-stop recovery (§15) pays its transfer inside the pause, and
+        a first-time (src, dst) pair spends most of that transfer in
+        one-time pack/scatter/staging compiles — measured ~5× the warm
+        transfer on the smoke workload. jax's jit cache is keyed on
+        avals + shardings, so executing one throwaway transfer of the same
+        plan against the same shardings warms every executable the real
+        recovery will use (the recovery path is lossless, so the prewarm
+        runs lossless too). Sources are throwaway zero arrays with the
+        live leaves' avals + shardings — the train step donates the real
+        buffers, so reading them from a background thread would race with
+        training — and the results are discarded.
+
+        With ``src_parallel``/``src_shardings`` the pair is
+        (src world → target) instead of (current → target): the
+        stream-ahead path (:meth:`prewarm_failover_ahead`) warms the
+        incoming world's failover pairs while the resize toward it is
+        still preparing/streaming. The live state will carry exactly
+        those shardings after the commit; global shapes/dtypes are
+        world-invariant. Returns True when a prewarm thread was started."""
+        if self.world_pool is None:
+            return False
+        ahead = src_parallel is not None
+        if not ahead and self.reconfig_pending:
+            return False
+        if src_parallel is None:
+            src_parallel = self.world.parallel
+        if target == src_parallel:
+            return False
+        pair = (src_parallel, target)
+        if pair in self._prewarmed_pairs:
+            return False
+        if self._prewarm_thread is not None and self._prewarm_thread.is_alive():
+            return False
+        handle = self.world_pool.peek(self.pool_key(target))
+        if handle is None or handle.released:
+            return False
+        self._speculation_trace(
+            f"prewarm start {src_parallel.describe()}->{target.describe()} "
+            f"ahead={ahead}"
+        )
+        self._prewarmed_pairs.add(pair)
+        self._prewarm_pair = pair
+        targets = self._named_target_shardings(handle)
+        extra_sh = self._extra_shardings(handle)
+        # Metadata-only snapshot: (name, shape, dtype, sharding) per leaf.
+        # The arrays themselves must not escape to the thread — train steps
+        # donate them, and a donated buffer read off-thread is a race.
+        named, extras = named_state_leaves(self.params, self.opt_state)
+        src_sh = (
+            src_shardings
+            if ahead
+            else {n: a.sharding for n, a in named.items()}
+        )
+        named_meta = {
+            n: (a.shape, a.dtype, src_sh[n]) for n, a in named.items()
+        }
+        if not ahead:
+            extra_leaves, extra_treedef = jax.tree_util.tree_flatten(extras)
+            extra_meta = [
+                (a.shape, a.dtype, a.sharding) if hasattr(a, "sharding") else a
+                for a in extra_leaves
+            ]
+        else:
+            # extras (step count, error-feedback buffers) reshard through
+            # the plan-less fallback whose programs are per-leaf trivial;
+            # skip them rather than reconstruct their future shardings
+            extra_leaves, extra_treedef, extra_meta = [], None, []
+
+        def _zeros(shape, dtype, sharding):
+            return jax.jit(
+                lambda: jnp.zeros(shape, dtype), out_shardings=sharding
+            )()
+
+        def _warm() -> None:
+            try:
+                from repro.elastic.redundancy import (
+                    balance_donors,
+                    heal_plan,
+                    survivors_for,
+                )
+
+                dummy_named = {
+                    n: _zeros(*m) for n, m in named_meta.items()
+                }
+                # mirror fail_stop_recover's plan EXACTLY — the warned-rung
+                # geometry (prefix complement of the target lost, sources
+                # survivor-constrained, donors balanced). The jit cache is
+                # keyed on the programs the plan's cells produce, so a
+                # prewarm against any other plan warms nothing the
+                # recovery pause will run.
+                lost = tuple(
+                    range(target.world_size, src_parallel.world_size)
+                )
+                survivors = survivors_for(
+                    src_parallel, lost, target=target, devices_failed=False
+                )
+                specs, plan = plan_state_transfer(
+                    self.cfg, src_parallel, target,
+                    source_policy=self.source_policy,
+                    allowed_src=survivors,
+                )
+                if plan.lost_tasks():
+                    plan, _ = heal_plan(plan, specs)
+                plan = balance_donors(plan, specs, survivors)
+                live_reshard_planned(
+                    specs, plan, dummy_named, targets,
+                    staging_bytes=self.staging_bytes,
+                    wire_policy=None,
+                    wire_bw_bytes_s=self.wire_bw_bytes_s,
+                )
+                if extra_treedef is not None:
+                    dummy_extras = jax.tree_util.tree_unflatten(
+                        extra_treedef,
+                        [
+                            _zeros(*m) if isinstance(m, tuple) else m
+                            for m in extra_meta
+                        ],
+                    )
+                    live_reshard(
+                        dummy_extras, extra_sh, staging_bytes=self.staging_bytes
+                    )
+                self._speculation_trace(
+                    f"prewarm done {src_parallel.describe()}"
+                    f"->{target.describe()} ahead={ahead}"
+                )
+            except BaseException:
+                # speculation must never take down training; the real
+                # transfer will compile (and surface errors) on its own
+                self._speculation_trace(
+                    f"prewarm FAILED {src_parallel.describe()}"
+                    f"->{target.describe()} ahead={ahead}\n"
+                    + traceback.format_exc()
+                )
+
+        # Non-daemon: a daemon thread killed inside an XLA compile at
+        # interpreter exit aborts the process ("terminate called without
+        # an active exception"); Python joins non-daemon threads cleanly.
+        self._prewarm_thread = threading.Thread(
+            target=_warm, name="transfer-prewarm", daemon=False
+        )
+        self._prewarm_thread.start()
+        return True
+
     # ------------------------------------------------------------------
     # Prepare (background)
     # ------------------------------------------------------------------
@@ -415,6 +667,8 @@ class LiveRController:
         self._builder = ShadowBuilder(
             build, gen.gen_id, on_discard=self._discard_world
         ).start()
+        # knowable-now metadata for the stream-ahead prewarm (§15)
+        self._inflight_target = target
         return gen.gen_id
 
     def cancel_resize(self, outcome: Optional[str] = None) -> None:
@@ -581,8 +835,23 @@ class LiveRController:
                 collect(self.step, metrics)
             if self._ckpt and self.step % self.ckpt_interval == 0:
                 self._ckpt.save(self.step, {"params": self.params, "opt": self.opt_state})
+            if self.parity_every and self.step % self.parity_every == 0:
+                self._refresh_parity()
             self._poll_boundary()
         return losses
+
+    def _refresh_parity(self) -> None:
+        """Idle-boundary XOR parity snapshot (spare-shard scheme, §15)."""
+        from repro.core.resource_view import build_tensor_specs
+        from repro.elastic.redundancy import ParityStore
+
+        if self._parity is None or self._parity.cfg != self.world.parallel:
+            specs = build_tensor_specs(
+                self.cfg, include_optimizer=True, zero_sharding=False
+            )
+            self._parity = ParityStore(specs, self.world.parallel)
+        named, _ = named_state_leaves(self.params, self.opt_state)
+        self._parity.refresh(named, self.step)
 
     def _batch(self):
         tokens = jnp.asarray(self.data.global_batch_at(self.step))
@@ -756,7 +1025,9 @@ class LiveRController:
                 except BaseException as e:  # surfaced at arm time
                     holder["err"] = e
 
-            th = threading.Thread(target=compile_grad, daemon=True)
+            # non-daemon for the same reason as the prewarm thread: a
+            # daemon thread killed mid-XLA-compile at exit crashes
+            th = threading.Thread(target=compile_grad, daemon=False)
             th.start()
             self._grad_builder = (th, holder)
 
@@ -987,6 +1258,7 @@ class LiveRController:
 
     def _reset_reconfig_state(self) -> None:
         self._builder = None
+        self._inflight_target = None
         self._session = None
         self._session_specs = None
         self._session_plan = None
@@ -1014,30 +1286,278 @@ class LiveRController:
             )
             self._ckpt.wait()
 
+    def peer_coverage(
+        self,
+        target: ParallelConfig,
+        lost_ranks: tuple = (),
+        devices_failed: bool = True,
+    ):
+        """(survivor-constrained plan covers the state?, donor wire bytes).
+
+        Metadata-only (one intersection plan), used by the deadline
+        estimator to price the ``peer_recover`` rung. Counts state the
+        fresh parity word could repair as covered."""
+        from repro.elastic.redundancy import survivors_for
+
+        src = self.world.parallel
+        survivors = survivors_for(
+            src, lost_ranks, target=target, devices_failed=devices_failed
+        )
+        _, plan = plan_state_transfer(
+            self.cfg, src, target,
+            source_policy=self.source_policy, allowed_src=survivors,
+        )
+        lost_bytes = plan.lost_bytes
+        parity_ok = self._parity is not None and self._parity.covers(self.step)
+        covered = lost_bytes == 0 or parity_ok
+        return covered, plan.network_bytes + (lost_bytes if parity_ok else 0)
+
     def fail_stop_recover(
-        self, target: ParallelConfig, devices_failed: bool = True
+        self,
+        target: ParallelConfig,
+        devices_failed: bool = True,
+        lost_ranks: tuple = (),
     ) -> ReconfigRecord:
-        """Rebuild from the latest durable checkpoint.
+        """Recover a fail-stop from surviving peers, in memory (§15).
+
+        The recovery rungs, in order:
+
+        1. **peer_recover** — plan the state transfer with sources
+           restricted to the survivor set; DP/EP replicas donate the cells
+           the dead ranks held (donor-balanced), cells whose whole replica
+           group died are reconstructed from the XOR parity word when it
+           is fresh. The survivor world comes warm-pool-first, then the
+           stream runs over the same engine as a live resize — losslessly:
+           recovery is correctness-critical, so the compressed wire format
+           never applies. No step rollback: the survivors' state IS the
+           current step.
+        2. **checkpoint** (demoted, last resort) — only when survivors +
+           parity cannot cover the state and a ckpt_dir exists.
+        3. Neither → typed :class:`RecoveryError` (never a bare assert).
 
         ``devices_failed`` distinguishes an unannounced failure (devices
         in the old world are suspect: the outgoing world is NOT pooled and
-        pooled worlds needing more devices than ``target`` are
-        invalidated — under prefix allocation they overlap the suspect
-        set) from the scheduler's checkpoint rung for a *warned* event
-        (devices are fine, only the window was too short — warm worlds
-        stay valid)."""
-        assert self.ckpt_dir, "fallback requires a checkpoint directory"
-        if devices_failed and self.world_pool is not None:
+        pooled worlds overlapping the lost device prefix are invalidated)
+        from the scheduler's past-deadline rung for a *warned* event
+        (devices are fine, only the window was too short — everyone
+        survives and warm worlds stay valid). ``lost_ranks`` names the
+        dead ranks explicitly; empty means the prefix-allocation default
+        (the ranks beyond ``target``'s world died)."""
+        from repro.elastic.redundancy import (
+            balance_donors,
+            heal_plan,
+            survivors_for,
+        )
+
+        src_parallel = self.world.parallel
+        survivors = survivors_for(
+            src_parallel, lost_ranks, target=target,
+            devices_failed=devices_failed,
+        )
+        lost = frozenset(range(src_parallel.world_size)) - survivors
+        if devices_failed and self.world_pool is not None and lost:
+            # under prefix allocation a pooled world of size W runs on
+            # devices[:W] — it overlaps the dead set iff W exceeds the
+            # lowest lost device id
+            min_lost = min(lost)
             self.world_pool.invalidate(
-                lambda key, h: h.parallel.world_size > target.world_size
+                lambda key, h: h.parallel.world_size > min_lost
+            )
+
+        rec = ReconfigRecord(
+            gen_id=-1, src=src_parallel.describe(), dst=target.describe(),
+            mode="peer_recover", outcome="committed",
+        )
+        rec.lost_devices = len(lost)
+        pause_start = time.perf_counter()
+
+        # residual shadow work (paper §4.1 graceful degradation): a ready
+        # shadow for the same target skips re-initialization — even one
+        # caught mid-stream or mid-commit; its partially streamed state is
+        # dropped (it may predate this boundary's cut) and re-streamed
+        residual = None
+        if (
+            self._builder is not None
+            and self._builder.ready
+            and self.machine.shadow is not None
+        ):
+            cand: WorldHandle = self._builder.result()
+            if cand.parallel == target:
+                residual = cand
+        if self._builder is not None and residual is None:
+            self._builder.abandon()
+        if self.machine.state in (GenState.PREPARE, GenState.READY):
+            self.machine.cancel()
+        self._reset_reconfig_state()
+
+        # if a prewarm for exactly this pair is mid-compile, wait for it:
+        # its cache insert is strictly cheaper than compiling the same
+        # programs a second time in parallel with it
+        if (
+            self._prewarm_thread is not None
+            and self._prewarm_thread.is_alive()
+            and self._prewarm_pair == (src_parallel, target)
+        ):
+            self._prewarm_thread.join(timeout=60.0)
+        self._speculation_trace(
+            f"recover {src_parallel.describe()}->{target.describe()} "
+            f"prewarmed={(src_parallel, target) in self._prewarmed_pairs}"
+        )
+
+        # survivor-constrained plan (metadata only)
+        t0 = time.perf_counter()
+        specs, plan = plan_state_transfer(
+            self.cfg, src_parallel, target,
+            source_policy=self.source_policy, allowed_src=survivors,
+        )
+        rec.plan_s = time.perf_counter() - t0
+
+        lost_tasks = plan.lost_tasks()
+        parity_fresh = (
+            self._parity is not None
+            and self._parity.cfg == src_parallel
+            and self._parity.covers(self.step)
+        )
+        if lost_tasks and not parity_fresh:
+            # peers cannot cover the state: demote to the checkpoint rung
+            return self._checkpoint_restore(
+                target, devices_failed, pause_start, rec.lost_devices,
+                reason=f"{plan.lost_bytes} bytes have no surviving replica "
+                "and no fresh parity",
+            )
+
+        # consistent cut: all in-flight device work lands before we read
+        # survivor bytes (and before parity mixes them into a repair)
+        t0 = time.perf_counter()
+        jax.block_until_ready((self.params, self.opt_state))
+        rec.drain_s = time.perf_counter() - t0
+
+        named, extras = named_state_leaves(self.params, self.opt_state)
+        if lost_tasks:
+            named, rec.parity_bytes = self._parity.repair(
+                named, lost, self.step
+            )
+            plan, _ = heal_plan(plan, specs)
+        plan = balance_donors(plan, specs, survivors)
+        rec.plan_network_bytes = plan.network_bytes
+        rec.plan_local_bytes = plan.local_bytes
+        rec.donors = len(
+            {t.src_rank for t in plan.tasks if t.kind == "remote"}
+        )
+
+        # survivor world: residual shadow, warm pool, an in-flight
+        # speculative build (joined), then cold
+        t0 = time.perf_counter()
+        world = residual
+        rec.prepare_source = "residual" if residual is not None else "cold"
+        if world is None and self.world_pool is not None:
+            world = self.world_pool.take(self.pool_key(target))
+            if world is not None:
+                rec.prepare_source = "pool"
+            else:
+                join = self._spec_builders.pop(self.pool_key(target), None)
+                if join is not None:
+                    try:
+                        world = self._refresh_pooled(
+                            join.result(), self._overlap_mode,
+                            source="speculative_join",
+                        )
+                        rec.prepare_source = "speculative_join"
+                    except BaseException:
+                        world = None
+        rec.warm_hit = world is not None and rec.prepare_source == "pool"
+        if world is None:
+            world = self._build_world(
+                target, split_step=self.world_pool is not None
+            )
+        rec.prepare_s = time.perf_counter() - t0
+
+        # donor stream over the shared engine — always lossless: a lossy
+        # wire would make the recovered state diverge from the survivors'
+        t0 = time.perf_counter()
+        targets = self._named_target_shardings(world)
+        moved, stats = live_reshard_planned(
+            specs, plan, named, targets,
+            staging_bytes=self.staging_bytes,
+            wire_policy=None,
+            wire_bw_bytes_s=self.wire_bw_bytes_s,
+        )
+        new_extras, rep_x = live_reshard(
+            extras, self._extra_shardings(world),
+            staging_bytes=self.staging_bytes,
+        )
+        self.params, self.opt_state = rebuild_state(
+            moved, self.params, self.opt_state, new_extras
+        )
+        rec.transfer_s = time.perf_counter() - t0
+        rec.moved_bytes = (
+            stats.network_bytes + stats.local_bytes + rep_x.moved_bytes
+        )
+        rec.skipped_bytes = stats.resident_bytes
+        rec.resident_cells = stats.resident_cells
+        rec.wire_bytes = stats.wire_bytes
+        rec.logical_bytes = stats.logical_bytes
+        rec.executed_bytes = stats.executed_bytes + rep_x.moved_bytes
+        # NO step rollback: survivors carry the current step's state
+
+        t0 = time.perf_counter()
+        gen = self.machine.begin_prepare("failstop-" + target.describe())
+        self.machine.mark_ready(gen.gen_id, payload=world)
+        self.machine.begin_switch(gen.gen_id)
+        old = self.machine.commit_switch(gen.gen_id)
+        rec.switch_s = time.perf_counter() - t0
+        if devices_failed:
+            # the outgoing world ran on the (partially) failed device set:
+            # never pool it — a later walk-up would compute the same
+            # fingerprint from the static device list and serve executables
+            # loaded onto a dead device
+            old.payload = None
+        else:
+            self._retire_world(old)
+        self.machine.finish_cleanup()
+        # the parity word XORs per-rank images of the OLD layout
+        self._parity = None
+
+        rec.total_pause_s = time.perf_counter() - pause_start
+        self.ledger.record(
+            pause_start, pause_start + rec.total_pause_s, "pause",
+            target.world_size,
+        )
+        self.records.append(rec)
+        return rec
+
+    def _checkpoint_restore(
+        self,
+        target: ParallelConfig,
+        devices_failed: bool,
+        pause_start: float,
+        lost_devices: int,
+        reason: str = "",
+    ) -> ReconfigRecord:
+        """The demoted last-resort rung: rebuild from the latest durable
+        checkpoint (rolls the step back to it). Only reached when the
+        survivor set plus parity cannot cover the state."""
+        from repro.core.errors import RecoveryError
+
+        if not self.ckpt_dir:
+            raise RecoveryError(
+                f"fail-stop to {target.describe()} is unrecoverable: "
+                f"{reason or 'peers cannot cover the state'}, and no "
+                "checkpoint directory is configured"
             )
         if self._ckpt:
-            self._ckpt.wait()
+            try:
+                self._ckpt.wait()
+            except Exception:
+                # a failed background write surfaces here (satellite:
+                # AsyncCheckpointer error propagation); an older durable
+                # step may still exist — let load_checkpoint decide
+                pass
         rec = ReconfigRecord(
             gen_id=-1, src=self.world.parallel.describe(),
             dst=target.describe(), mode="fallback", outcome="fell_back",
         )
-        pause_start = time.perf_counter()
+        rec.lost_devices = lost_devices
         # residual shadow work (paper §4.1 graceful degradation): a ready
         # shadow for the same target skips re-initialization
         residual = None
@@ -1072,11 +1592,18 @@ class LiveRController:
 
         t0 = time.perf_counter()
         ps, os_, _ = world.shardings
-        state, step, load_s = load_checkpoint(
-            self.ckpt_dir,
-            like={"params": self.params, "opt": self.opt_state},
-            target_shardings={"params": ps, "opt": os_},
-        )
+        try:
+            state, step, load_s = load_checkpoint(
+                self.ckpt_dir,
+                like={"params": self.params, "opt": self.opt_state},
+                target_shardings={"params": ps, "opt": os_},
+            )
+        except Exception as e:
+            raise RecoveryError(
+                f"fail-stop to {target.describe()} is unrecoverable: "
+                f"{reason or 'peers cannot cover the state'}, and no "
+                f"durable checkpoint could be loaded from {self.ckpt_dir}"
+            ) from e
         self.params, self.opt_state = state["params"], state["opt"]
         self.step = step
 
@@ -1085,14 +1612,11 @@ class LiveRController:
         self.machine.begin_switch(gen.gen_id)
         old = self.machine.commit_switch(gen.gen_id)
         if devices_failed:
-            # the outgoing world ran on the (partially) failed device set:
-            # never pool it — a later walk-up would compute the same
-            # fingerprint from the static device list and serve executables
-            # loaded onto a dead device
             old.payload = None
         else:
             self._retire_world(old)
         self.machine.finish_cleanup()
+        self._parity = None
 
         rec.transfer_s = load_s
         rec.prepare_s = init_s

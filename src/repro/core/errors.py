@@ -1,0 +1,19 @@
+"""Typed recovery errors (DESIGN.md §15).
+
+``RecoveryError`` replaces the bare ``assert self.ckpt_dir`` that used to
+guard ``fail_stop_recover``: asserts vanish under ``python -O``, and the
+scheduler needs a typed signal it can catch to retire the event as
+``aborted`` instead of crashing the replay loop. Raised when a fail-stop
+cannot be recovered by *any* rung — the survivor set (plus parity) cannot
+cover the state and no checkpoint directory is configured.
+
+Lives in ``core`` (not ``elastic.redundancy``) so the reshard engine can
+refuse to execute ``kind == "lost"`` tasks without importing the elastic
+package (which imports reshard back — a cycle).
+"""
+
+from __future__ import annotations
+
+
+class RecoveryError(RuntimeError):
+    """No recovery rung can restore the state; fail loudly with context."""

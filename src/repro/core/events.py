@@ -1,7 +1,11 @@
 """Elasticity events (paper §4.1 'Elasticity event spectrum').
 
-Planned resizes and preemption warnings carry a warning window; fail-stop
-events do not (invariant I4 routes them to checkpoint recovery).
+Planned resizes and preemption warnings carry a warning window — use
+``warning_s=float("inf")`` for a planned resize with no deadline at all
+(the arithmetic is inf-safe end to end; serialized payloads render it as
+the string ``"inf"``). Fail-stop events have no window; the scheduler
+recovers them from peer replicas when the survivors cover the state,
+falling back to the durable checkpoint (DESIGN.md §15).
 """
 
 from __future__ import annotations
@@ -29,8 +33,10 @@ class ResizeEvent:
 @dataclass(frozen=True)
 class FailStopEvent:
     """Unannounced failure: zero warning window. The scheduler routes these
-    to the durable-checkpoint fallback (controller ``fail_stop_recover``);
-    ``target`` is the post-failure topology when the (external) search
+    to peer-replica recovery (controller ``fail_stop_recover``), which
+    demotes to the durable checkpoint only when survivors + parity cannot
+    cover the state; ``target`` is the post-failure topology when the
+    (external) search
     system has already chosen one, else the scheduler picks via
     :func:`repro.core.topology_search.best_target` over the surviving
     devices."""

@@ -51,10 +51,14 @@ class TransferTask:
     dst_offset: tuple[int, ...]  # region origin within the destination shard
     nbytes: int
     layer: int  # streaming group (global layer id; -1 = non-layer state)
-    # cell class (DESIGN.md §13):
+    # cell class (DESIGN.md §13, §15):
     #   "resident" — src shard == dst shard on the same device: a no-op
     #   "local"    — same device, different layout: on-device relayout
     #   "remote"   — genuine cross-device transfer
+    #   "lost"     — no allowed source rank holds this cell (survivor-
+    #                constrained planning, DESIGN.md §15); src_rank == -1
+    #                and the cell must be repaired (parity) or the plan
+    #                abandoned before execution.
     # The default keeps hand-built synthetic tasks (plan-less live_reshard,
     # test fixtures) on the conservative full-transfer path.
     kind: str = "remote"
@@ -90,6 +94,14 @@ class TransferPlan:
     def resident_bytes(self) -> int:
         """Bytes already in place on the right device: never moved."""
         return sum(t.nbytes for t in self.tasks if t.kind == "resident")
+
+    @property
+    def lost_bytes(self) -> int:
+        """Bytes with no surviving source under ``allowed_src`` planning."""
+        return sum(t.nbytes for t in self.tasks if t.kind == "lost")
+
+    def lost_tasks(self) -> list[TransferTask]:
+        return [t for t in self.tasks if t.kind == "lost"]
 
     def kind_bytes(self) -> dict[str, int]:
         out = {"resident": 0, "local": 0, "remote": 0}
@@ -162,6 +174,41 @@ def _layer_id(
     return cell_lo * num_positions + j
 
 
+def replica_candidates(
+    spec: TensorSpec,
+    cfg_src: ParallelConfig,
+    bounds: tuple[tuple[int, int], ...],
+) -> list[int]:
+    """All source ranks whose view contains ``bounds`` (replica group).
+
+    The roled dims of the cell fix one coordinate per parallel factor; the
+    remaining (free) factors enumerate the replicas. This is the geometry
+    ``_emit_cell`` uses to choose a source, exposed for the redundancy map
+    (DESIGN.md §15): restricting this list to survivors tells recovery who
+    can donate the cell.
+    """
+    fixed: dict[str, int] = {}
+    for d, role in enumerate(spec.roles):
+        if role == "none":
+            continue
+        fixed[role] = _src_index_for(spec, d, cfg_src, bounds[d][0])
+    if spec.stage_scope == "first":
+        fixed["pp"] = 0
+    elif spec.stage_scope == "last":
+        fixed["pp"] = cfg_src.pp - 1
+    dp_r = [fixed["dp"]] if "dp" in fixed else range(cfg_src.dp)
+    pp_r = [fixed["pp"]] if "pp" in fixed else range(cfg_src.pp)
+    ep_r = [fixed["ep"]] if "ep" in fixed else range(cfg_src.ep)
+    tp_r = [fixed["tp"]] if "tp" in fixed else range(cfg_src.tp)
+    return [
+        cfg_src.coords_rank(di, pi, ei, ti)
+        for di in dp_r
+        for pi in pp_r
+        for ei in ep_r
+        for ti in tp_r
+    ]
+
+
 def _pick_source(
     policy: str,
     candidates: list[int],
@@ -193,12 +240,18 @@ def plan_transfer(
     source_policy: str = "nearest",
     layer_granular: bool = True,
     num_positions: int = 1,
+    allowed_src: Optional[frozenset[int]] = None,
 ) -> TransferPlan:
     """Compute the full transfer plan between two configurations.
 
     layer_granular: additionally cut the stacked-layers dim into unit slices
     so execution can stream one *model layer* at a time (Algorithm 1);
     ``num_positions`` is the block-program period (for global layer ids).
+
+    allowed_src: survivor-constrained planning (DESIGN.md §15) — only these
+    source ranks may donate a cell. Cells whose whole replica group fell
+    outside the set come back as ``kind == "lost"`` with ``src_rank == -1``;
+    the caller must repair them (parity) or abandon the plan.
     """
     tasks: list[TransferTask] = []
     for spec in specs:
@@ -233,6 +286,7 @@ def plan_transfer(
                         source_policy,
                         num_positions,
                         ldim,
+                        allowed_src,
                     )
                     return
                 for seg in per_dim[d]:
@@ -257,39 +311,40 @@ def _emit_cell(
     policy: str,
     num_positions: int,
     ldim: Optional[int],
+    allowed_src: Optional[frozenset[int]] = None,
 ) -> None:
-    # source coords fixed by the roled dims this cell falls into
-    fixed: dict[str, int] = {}
-    for d, role in enumerate(spec.roles):
-        if role == "none":
-            continue
-        fixed[role] = _src_index_for(spec, d, cfg_src, bounds[d][0])
-    if spec.stage_scope == "first":
-        fixed["pp"] = 0
-    elif spec.stage_scope == "last":
-        fixed["pp"] = cfg_src.pp - 1
-    # free factors -> replicas
-    dp_r = [fixed["dp"]] if "dp" in fixed else range(cfg_src.dp)
-    pp_r = [fixed["pp"]] if "pp" in fixed else range(cfg_src.pp)
-    ep_r = [fixed["ep"]] if "ep" in fixed else range(cfg_src.ep)
-    tp_r = [fixed["tp"]] if "tp" in fixed else range(cfg_src.tp)
-    candidates = [
-        cfg_src.coords_rank(di, pi, ei, ti)
-        for di in dp_r
-        for pi in pp_r
-        for ei in ep_r
-        for ti in tp_r
-    ]
-    cell_key = hash(bounds) & 0x7FFFFFFF
-    src_rank = _pick_source(policy, candidates, dst_rank, cell_key, dst_coords, cfg_src)
-    v_src = view_of(spec, cfg_src, src_rank)
-    assert v_src is not None
+    candidates = replica_candidates(spec, cfg_src, bounds)
     nbytes = itemsize
     for lo, hi in bounds:
         nbytes *= hi - lo
     layer = -1
     if ldim is not None:
         layer = _layer_id(spec, bounds[ldim][0], num_positions)
+    if allowed_src is not None:
+        candidates = [r for r in candidates if r in allowed_src]
+        if not candidates:
+            # whole replica group died: record the hole, let recovery decide
+            tasks.append(
+                TransferTask(
+                    tensor=spec.name,
+                    collection=spec.collection,
+                    src_rank=-1,
+                    dst_rank=dst_rank,
+                    bounds=bounds,
+                    src_offset=tuple(0 for _ in bounds),
+                    dst_offset=tuple(
+                        b[0] - v[0] for b, v in zip(bounds, v_dst.bounds)
+                    ),
+                    nbytes=nbytes,
+                    layer=layer,
+                    kind="lost",
+                )
+            )
+            return
+    cell_key = hash(bounds) & 0x7FFFFFFF
+    src_rank = _pick_source(policy, candidates, dst_rank, cell_key, dst_coords, cfg_src)
+    v_src = view_of(spec, cfg_src, src_rank)
+    assert v_src is not None
     # Classification (DESIGN.md §13). Under the prefix device allocation rank
     # r maps to devices[r] in both configs, so src_rank == dst_rank means the
     # same physical device. "resident" additionally requires the whole shard

@@ -172,12 +172,17 @@ def plan_state_transfer(
     cfg_src: ParallelConfig,
     cfg_dst: ParallelConfig,
     source_policy: str = "nearest",
+    allowed_src=None,
 ) -> tuple[list[TensorSpec], TransferPlan]:
     """Specs + intersection plan for the live training state.
 
     ``zero_sharding=False``: the live runtime shards optimizer moments like
     parameters (distribution/sharding.py), not ZeRO-split, so the plan's
     byte accounting matches what actually moves.
+
+    ``allowed_src`` restricts sources to a survivor set (peer recovery,
+    DESIGN.md §15); cells nobody in the set can donate come back as
+    ``kind == "lost"``.
     """
     from repro.models.transformer import block_program
 
@@ -189,6 +194,7 @@ def plan_state_transfer(
         source_policy=source_policy,
         layer_granular=True,
         num_positions=len(block_program(cfg)),
+        allowed_src=allowed_src,
     )
     return specs, plan
 

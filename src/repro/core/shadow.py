@@ -65,7 +65,7 @@ class WorldHandle:
 
 
 class ShadowBuilder:
-    """Builds a WorldHandle in a daemon thread; poll ``ready`` — the
+    """Builds a WorldHandle in a background thread; poll ``ready`` — the
     Companion Manager thread of the paper's §4.5.1.
 
     ``on_discard`` is invoked exactly once with the completed handle when
@@ -87,7 +87,11 @@ class ShadowBuilder:
         self._result: Optional[WorldHandle] = None
         self._error: Optional[BaseException] = None
         self._done = threading.Event()
-        self._thread = threading.Thread(target=self._run, daemon=True)
+        # non-daemon: a daemon thread killed inside an XLA compile at
+        # interpreter exit segfaults/aborts the process; Python joins
+        # non-daemon threads cleanly (exit waits out an in-flight build
+        # instead of crashing)
+        self._thread = threading.Thread(target=self._run, daemon=False)
         # stamped when the worker thread starts, NOT at construction:
         # callers (the warm pool above all) routinely construct builders
         # well before starting them, and stamping in __init__ silently
@@ -132,7 +136,7 @@ class ShadowBuilder:
 
     def abandon(self) -> None:
         """Retarget/cancel semantics (paper §7 'Concurrent reconfiguration
-        events'): the daemon thread cannot be killed mid-``compile()``, so
+        events'): the worker thread cannot be killed mid-``compile()``, so
         the builder is marked abandoned and its world discarded on
         completion (``on_discard`` — release or pool deposit; it no longer
         lingers until GC). The controller may start a fresh builder

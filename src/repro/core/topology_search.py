@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Optional
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.launch.mesh import HBM_BW, HBM_BYTES, ICI_BW, PEAK_FLOPS_BF16
@@ -182,6 +183,43 @@ def likely_next_targets(
                     break
         depth += 1
     return out[:k]
+
+
+def failover_target(
+    cfg: ModelConfig,
+    current: ParallelConfig,
+    global_batch: int,
+    max_pp: int = 8,
+) -> Optional[ParallelConfig]:
+    """The prefix-survivor standby: the world an unannounced fail-stop
+    would recover into (DESIGN.md §15).
+
+    Under prefix device allocation a failure takes the tail ranks, and
+    the cheapest covered recovery target drops whole replica groups:
+    one DP replica when ``dp > 1`` (survivors hold every shard locally),
+    else half the tp (parity repairs the lost tp group), else half the
+    pp. Keeping this one world warm in the pool bounds the fail-stop
+    pause to the transfer itself — never a cold Prepare.
+    """
+    dp, pp, tp = current.dp, current.pp, current.tp
+    candidates: list[ParallelConfig] = []
+    if dp > 1:
+        # largest feasible dp' < dp, same (pp, tp): one-replica-down
+        # first, halving as the divisibility fallback
+        for d in range(dp - 1, 0, -1):
+            if global_batch % d == 0:
+                candidates.append(ParallelConfig(dp=d, pp=pp, tp=tp))
+                break
+    elif tp > 1:
+        candidates.append(ParallelConfig(dp=1, pp=pp, tp=tp // 2))
+    elif pp > 1:
+        candidates.append(ParallelConfig(dp=1, pp=pp // 2, tp=1))
+    for cand in candidates:
+        if cand in feasible_configs(
+            cfg, cand.world_size, global_batch, max_pp=max_pp
+        ):
+            return cand
+    return None
 
 
 def best_target(

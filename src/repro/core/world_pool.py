@@ -94,6 +94,16 @@ class WorldPool:
         with self._lock:
             return list(self._entries)
 
+    def peek(self, key: PoolKey) -> Optional[WorldHandle]:
+        """Borrow the resident handle without transferring ownership.
+
+        Read-only uses (e.g. grabbing target shardings to pre-warm the
+        transfer executables, DESIGN.md §15): the entry stays pooled, is
+        not counted as a hit/miss, and may still be evicted later — the
+        caller must not retain the handle past the borrow."""
+        with self._lock:
+            return self._entries.get(key)
+
     # -- consume ----------------------------------------------------------
     def take(self, key: PoolKey) -> Optional[WorldHandle]:
         """Remove and return the warm world for ``key``, or None.

@@ -4,9 +4,20 @@ The controller executes ONE reconfiguration; this package turns streams of
 elasticity events — spot-market warnings, preemptions, fail-stops — into
 deadline-aware decisions over the live :class:`LiveRController`: overlapped
 streaming when the warning window allows, stop-copy when it is tight,
-durable checkpoint when nothing else fits (DESIGN.md §10).
+peer-replica recovery when the window is gone but survivors still cover the
+state (DESIGN.md §15), durable checkpoint only when nothing else fits
+(DESIGN.md §10).
 """
 
+from repro.elastic.faults import FaultInjector, InjectionReport, controller_phase
+from repro.elastic.redundancy import (
+    ParityStore,
+    RecoveryError,
+    RedundancyMap,
+    balance_donors,
+    heal_plan,
+    survivors_for,
+)
 from repro.elastic.scheduler import (
     DeadlineEstimator,
     ElasticScheduler,
@@ -22,9 +33,18 @@ __all__ = [
     "DeadlineEstimator",
     "ElasticScheduler",
     "EventOutcome",
+    "FaultInjector",
+    "InjectionReport",
+    "ParityStore",
     "PrefetchPolicy",
     "ReconfigEstimate",
+    "RecoveryError",
+    "RedundancyMap",
     "ScheduleReport",
+    "balance_donors",
     "choose_mode",
+    "controller_phase",
     "events_from_trace",
+    "heal_plan",
+    "survivors_for",
 ]

@@ -1,0 +1,423 @@
+"""Peer-redundancy recovery layer (DESIGN.md §15).
+
+The fallback lattice used to bottom out in the checkpoint rung for every
+unannounced fail-stop: save/restore through storage, minutes of pause at
+paper scale. But the redundancy needed to recover is usually already in
+device memory — DP replicas hold full copies of params and (non-ZeRO)
+optimizer moments, and the intersection planner knows exactly which ranks
+those are. This module turns that observation into a recovery path:
+
+* :class:`RedundancyMap` — for one source world and one survivor set,
+  which surviving rank holds a valid replica of each distinct shard
+  (computed from the planner's src views, grouped by view bounds).
+* :func:`survivors_for` — the survivor set implied by a fail-stop event
+  (explicit ``lost_ranks``, or the prefix-allocation default: the ranks
+  beyond the target world died).
+* :func:`balance_donors` — post-pass over a survivor-constrained
+  :class:`~repro.core.intersection.TransferPlan` that spreads remote cells
+  across the surviving replicas of each cell so no single donor serializes
+  the recovery stream (greedy least-loaded-by-bytes).
+* :class:`ParityStore` — the spare-shard/erasure scheme for worlds with no
+  replica axis (dp=1): a periodic XOR parity of the distinct shard images
+  of every tensor, staged off the owning replicas during idle step
+  boundaries. A shard whose entire replica group died is reconstructed as
+  ``parity XOR (all surviving groups)`` and patched back into the live
+  arrays before the recovery stream runs.
+* :func:`heal_plan` — after parity repair, rewrites ``kind == "lost"``
+  cells into executable remote cells sourced from the (repaired) owner
+  rank, with the repaired bytes tracked separately as ``parity_bytes``.
+
+``RecoveryError`` (re-exported from :mod:`repro.core.errors`) is the typed
+"no rung left" failure: no surviving replica, no fresh parity, no
+checkpoint directory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Optional
+
+import numpy as np
+
+from repro.configs.base import ParallelConfig
+from repro.core.errors import RecoveryError
+from repro.core.intersection import (
+    TransferPlan,
+    TransferTask,
+    replica_candidates,
+)
+from repro.core.resource_view import TensorSpec, view_of
+
+__all__ = [
+    "RecoveryError",
+    "RedundancyMap",
+    "ParityStore",
+    "survivors_for",
+    "balance_donors",
+    "heal_plan",
+]
+
+
+def survivors_for(
+    cfg_src: ParallelConfig,
+    lost_ranks: Iterable[int] = (),
+    target: Optional[ParallelConfig] = None,
+    devices_failed: bool = True,
+) -> frozenset[int]:
+    """Survivor ranks of ``cfg_src`` after a fail-stop.
+
+    Explicit ``lost_ranks`` win. Otherwise, under the prefix device
+    allocation (rank r ↔ devices[r] in every world), an unannounced
+    fail-stop that forces a shrink to ``target`` means the ranks beyond the
+    target prefix died. With ``devices_failed=False`` (warned event past
+    its window: the machines are still up) everyone survives.
+    """
+    lost = set(int(r) for r in lost_ranks)
+    if not lost and devices_failed and target is not None:
+        lost = set(range(target.world_size, cfg_src.world_size))
+    return frozenset(range(cfg_src.world_size)) - lost
+
+
+# ---------------------------------------------------------------------------
+# Redundancy map
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShardCover:
+    """One distinct shard image of one tensor and who can still donate it."""
+
+    tensor: str
+    bounds: tuple[tuple[int, int], ...]
+    owners: tuple[int, ...]  # the full replica group in cfg_src
+    donors: tuple[int, ...]  # owners ∩ survivors
+    nbytes: int
+
+
+@dataclass
+class RedundancyMap:
+    """Which surviving device holds a valid replica of each shard.
+
+    Shards are grouped by view bounds — ranks with byte-identical views
+    form one replica group (DP for params/moments on the live path, plus
+    EP for non-expert tensors). ``complete`` iff every group kept at least
+    one survivor; ``uncovered`` lists the holes parity must fill.
+    """
+
+    cfg: ParallelConfig
+    survivors: frozenset[int]
+    covers: list[ShardCover] = field(default_factory=list)
+
+    @classmethod
+    def build(
+        cls,
+        specs: Iterable[TensorSpec],
+        cfg: ParallelConfig,
+        survivors: frozenset[int],
+    ) -> "RedundancyMap":
+        covers: list[ShardCover] = []
+        for spec in specs:
+            itemsize = np.dtype(spec.dtype).itemsize
+            groups: dict[tuple, list[int]] = {}
+            for r in range(cfg.world_size):
+                v = view_of(spec, cfg, r)
+                if v is None or v.size == 0:
+                    continue
+                groups.setdefault(v.bounds, []).append(r)
+            for bounds, owners in groups.items():
+                donors = tuple(r for r in owners if r in survivors)
+                nbytes = itemsize
+                for lo, hi in bounds:
+                    nbytes *= hi - lo
+                covers.append(
+                    ShardCover(
+                        tensor=spec.name,
+                        bounds=bounds,
+                        owners=tuple(owners),
+                        donors=donors,
+                        nbytes=nbytes,
+                    )
+                )
+        return cls(cfg=cfg, survivors=survivors, covers=covers)
+
+    @property
+    def complete(self) -> bool:
+        return all(c.donors for c in self.covers)
+
+    def uncovered(self) -> list[ShardCover]:
+        return [c for c in self.covers if not c.donors]
+
+    @property
+    def uncovered_bytes(self) -> int:
+        return sum(c.nbytes for c in self.uncovered())
+
+    def donor_load(self) -> dict[int, int]:
+        """Bytes each survivor would send if it donated every shard it
+        holds exactly once (an upper bound used for balance sanity)."""
+        load: dict[int, int] = {}
+        for c in self.covers:
+            for r in c.donors:
+                load[r] = load.get(r, 0) + c.nbytes
+        return load
+
+
+# ---------------------------------------------------------------------------
+# Donor balancing
+# ---------------------------------------------------------------------------
+
+
+def balance_donors(
+    plan: TransferPlan,
+    specs: Iterable[TensorSpec],
+    survivors: frozenset[int],
+) -> TransferPlan:
+    """Spread remote cells across surviving replicas, least-loaded first.
+
+    The planner's per-cell hash policy is donor-oblivious; after a
+    fail-stop the surviving replica groups shrink and a single donor can
+    end up sourcing most of the stream. This pass reassigns each remote
+    cell (largest first) to the surviving candidate with the least bytes
+    already assigned, recomputing the source offset from the chosen
+    donor's view. Resident/local cells are left alone — moving them to a
+    remote donor would turn free work into wire bytes.
+    """
+    by_name = {s.name: s for s in specs}
+    load: dict[int, int] = {r: 0 for r in survivors}
+    # non-remote work is fixed; seed the load with nothing (resident/local
+    # cells cost no wire time), then place remote cells greedily
+    remote = [t for t in plan.tasks if t.kind == "remote"]
+    keep = [t for t in plan.tasks if t.kind != "remote"]
+    out: list[TransferTask] = list(keep)
+    for t in sorted(remote, key=lambda t: -t.nbytes):
+        spec = by_name.get(t.tensor)
+        if spec is None:
+            out.append(t)
+            load[t.src_rank] = load.get(t.src_rank, 0) + t.nbytes
+            continue
+        cands = [
+            r
+            for r in replica_candidates(spec, plan.cfg_src, t.bounds)
+            if r in survivors
+        ]
+        if not cands:
+            out.append(t)
+            continue
+        src = min(cands, key=lambda r: (load.get(r, 0), r))
+        if src != t.src_rank:
+            v_src = view_of(spec, plan.cfg_src, src)
+            assert v_src is not None
+            t = dataclasses.replace(
+                t,
+                src_rank=src,
+                src_offset=tuple(
+                    b[0] - v[0] for b, v in zip(t.bounds, v_src.bounds)
+                ),
+            )
+        load[src] = load.get(src, 0) + t.nbytes
+        out.append(t)
+    return TransferPlan(tasks=out, cfg_src=plan.cfg_src, cfg_dst=plan.cfg_dst)
+
+
+# ---------------------------------------------------------------------------
+# Spare-shard / erasure scheme
+# ---------------------------------------------------------------------------
+
+
+def _shard_groups(
+    spec: TensorSpec, cfg: ParallelConfig
+) -> list[tuple[tuple[tuple[int, int], ...], list[int]]]:
+    """Distinct shard images of ``spec`` under ``cfg``: (bounds, owners).
+
+    Parity is computed over *distinct* images, one per replica group —
+    XOR-ing identical replicas would cancel them out of the parity word.
+    Deterministic order (sorted by bounds) so refresh and repair agree.
+    """
+    groups: dict[tuple, list[int]] = {}
+    for r in range(cfg.world_size):
+        v = view_of(spec, cfg, r)
+        if v is None or v.size == 0:
+            continue
+        groups.setdefault(v.bounds, []).append(r)
+    return sorted(groups.items())
+
+
+def _shard_bytes(arr: Any, bounds: tuple[tuple[int, int], ...]) -> np.ndarray:
+    sl = tuple(slice(lo, hi) for lo, hi in bounds)
+    host = np.ascontiguousarray(np.asarray(arr[sl]))
+    return host.view(np.uint8).reshape(-1)
+
+
+class ParityStore:
+    """Periodic XOR parity over the distinct shard images of each tensor.
+
+    ``refresh(named, step)`` snapshots one parity word per tensor —
+    byte-XOR of every distinct shard image, zero-padded to the largest —
+    at an idle step boundary. The words live off the owning replicas (host
+    memory here; a real deployment stages them onto spare devices), so
+    when an entire replica group dies its image is reconstructible as
+    ``parity XOR (surviving groups)``.
+
+    Parity is a consistent cut: repair is only valid when the snapshot
+    step equals the step the survivors are at (``covers(step)``), because
+    reconstruction mixes the stored word with the survivors' *live*
+    bytes. The controller refreshes at every boundary for dp=1 worlds
+    (cheap at repro scale; the paper's scheme rate-limits by staleness
+    tolerance), so an inter-step fail-stop always finds fresh parity.
+    """
+
+    def __init__(self, specs: Iterable[TensorSpec], cfg: ParallelConfig):
+        self.specs = {s.name: s for s in specs}
+        self.cfg = cfg
+        self.step: Optional[int] = None
+        self._parity: dict[str, np.ndarray] = {}
+        self.last_refresh_s = 0.0
+        self.refreshed_bytes = 0
+
+    def covers(self, step: int) -> bool:
+        return self.step == step and bool(self._parity)
+
+    def refresh(self, named: dict[str, Any], step: int) -> int:
+        """Rebuild every parity word from the live state at ``step``."""
+        t0 = time.perf_counter()
+        total = 0
+        parity: dict[str, np.ndarray] = {}
+        for name, spec in self.specs.items():
+            arr = named.get(name)
+            if arr is None:
+                continue
+            # one group (fully replicated or unsplit tensor) degenerates to
+            # a full spare copy — still the only redundancy such state has
+            groups = _shard_groups(spec, self.cfg)
+            width = 0
+            images = []
+            for bounds, _owners in groups:
+                img = _shard_bytes(arr, bounds)
+                width = max(width, img.size)
+                images.append(img)
+            word = np.zeros(width, dtype=np.uint8)
+            for img in images:
+                word[: img.size] ^= img
+            parity[name] = word
+            total += width
+        self._parity = parity
+        self.step = step
+        self.refreshed_bytes = total
+        self.last_refresh_s = time.perf_counter() - t0
+        return total
+
+    def dead_groups(
+        self, lost_ranks: frozenset[int]
+    ) -> list[tuple[str, tuple[tuple[int, int], ...], list[int]]]:
+        """(tensor, bounds, owners) of every group wholly inside the loss."""
+        out = []
+        for name, spec in self.specs.items():
+            for bounds, owners in _shard_groups(spec, self.cfg):
+                if all(r in lost_ranks for r in owners):
+                    out.append((name, bounds, owners))
+        return out
+
+    def repair(
+        self,
+        named: dict[str, Any],
+        lost_ranks: frozenset[int],
+        step: int,
+    ) -> tuple[dict[str, Any], int]:
+        """Reconstruct every dead group's image and patch it into ``named``.
+
+        Returns (patched leaves, repaired bytes). Raises
+        :class:`RecoveryError` when parity is stale or more than one group
+        of the same tensor died (single-parity-word erasure limit).
+        """
+        if not self.covers(step):
+            raise RecoveryError(
+                f"parity snapshot at step {self.step} cannot repair state at "
+                f"step {step}: stale or never refreshed"
+            )
+        patched = dict(named)
+        repaired = 0
+        by_tensor: dict[str, list] = {}
+        for name, bounds, owners in self.dead_groups(lost_ranks):
+            by_tensor.setdefault(name, []).append((bounds, owners))
+        for name, dead in by_tensor.items():
+            if len(dead) > 1:
+                raise RecoveryError(
+                    f"{name}: {len(dead)} shard groups lost at once — single "
+                    "XOR parity can reconstruct at most one"
+                )
+            spec = self.specs[name]
+            arr = patched.get(name)
+            if arr is None:
+                raise RecoveryError(f"{name}: no live leaf to repair into")
+            (bounds, _owners) = dead[0]
+            word = self._parity[name].copy()
+            for g_bounds, g_owners in _shard_groups(spec, self.cfg):
+                if g_bounds == bounds:
+                    continue
+                if not any(r not in lost_ranks for r in g_owners):
+                    raise RecoveryError(
+                        f"{name}: surviving group needed for parity repair "
+                        "also died"
+                    )
+                img = _shard_bytes(arr, g_bounds)
+                word[: img.size] ^= img
+            shape = tuple(hi - lo for lo, hi in bounds)
+            nbytes = int(np.prod(shape)) * np.dtype(spec.dtype).itemsize
+            vals = (
+                word[:nbytes].copy().view(np.dtype(spec.dtype)).reshape(shape)
+            )
+            sl = tuple(slice(lo, hi) for lo, hi in bounds)
+            if hasattr(arr, "at"):  # jax.Array
+                patched[name] = arr.at[sl].set(vals)
+            else:
+                host = np.array(arr, copy=True)
+                host[sl] = vals
+                patched[name] = host
+            repaired += nbytes
+        return patched, repaired
+
+
+def heal_plan(
+    plan: TransferPlan, specs: Iterable[TensorSpec]
+) -> tuple[TransferPlan, int]:
+    """Rewrite ``lost`` cells as executable remote cells after parity repair.
+
+    Once :meth:`ParityStore.repair` has patched the reconstructed bytes
+    back into the (global) source arrays, each lost cell can stream like
+    any other remote cell; we source it from the original owner rank —
+    the bytes are byte-identical to what that rank held, they just arrived
+    via the parity word. Returns (healed plan, parity-sourced bytes).
+    """
+    by_name = {s.name: s for s in specs}
+    healed: list[TransferTask] = []
+    parity_bytes = 0
+    for t in plan.tasks:
+        if t.kind != "lost":
+            healed.append(t)
+            continue
+        spec = by_name[t.tensor]
+        owner = None
+        for r in replica_candidates(spec, plan.cfg_src, t.bounds):
+            v = view_of(spec, plan.cfg_src, r)
+            if v is not None:
+                owner = (r, v)
+                break
+        if owner is None:
+            raise RecoveryError(f"{t.tensor}: lost cell has no owner view")
+        r, v = owner
+        healed.append(
+            dataclasses.replace(
+                t,
+                kind="remote",
+                src_rank=r,
+                src_offset=tuple(
+                    b[0] - vb[0] for b, vb in zip(t.bounds, v.bounds)
+                ),
+            )
+        )
+        parity_bytes += t.nbytes
+    return (
+        TransferPlan(tasks=healed, cfg_src=plan.cfg_src, cfg_dst=plan.cfg_dst),
+        parity_bytes,
+    )

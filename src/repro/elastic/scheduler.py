@@ -32,6 +32,7 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
+from repro.core.errors import RecoveryError
 from repro.core.events import FailStopEvent, ResizeEvent, sort_trace
 from repro.core.records import ReuseRecordMixin
 from repro.reshard.autotune import tune_operating_point
@@ -68,6 +69,14 @@ class ReconfigEstimate:
     wire_bytes: int = 0
     layers: int = 0
     lossless_transfer_s: float = 0.0
+    # peer_recover rung (DESIGN.md §15): True when the survivor set (plus
+    # fresh parity) covers the state, so an in-memory donor stream can
+    # replace the checkpoint round-trip; peer_pause_s prices that stream
+    # (warm/cold prepare + donor bytes at measured bandwidth, lossless —
+    # the recovery stream never compresses)
+    peer_ok: bool = False
+    peer_bytes: int = 0
+    peer_pause_s: float = 0.0
 
     @property
     def stream_total_s(self) -> float:
@@ -100,10 +109,13 @@ def choose_mode(
     """The fallback lattice: highest rung whose estimate fits the window.
 
     overlap ("stream") completes slowest but pauses least; stop-copy
-    completes right after Prepare at the price of one long pause; the
-    checkpoint rung always fits (a durable save needs no shadow world and
-    survives the resources vanishing at the deadline) and is therefore the
-    unconditional last resort.
+    completes right after Prepare at the price of one long pause;
+    peer_recover (DESIGN.md §15) needs nothing inside the window at all —
+    the survivors retain the state in device memory past the deadline and
+    the donor stream runs after it — so like checkpoint it always *fits*,
+    but it is only *available* when the survivor set covers the state
+    (``est.peer_ok``); the checkpoint rung (durable save, restart on the
+    target) is the unconditional last resort beneath it.
 
     ``lossless=True`` re-ranks the lattice on the uncompressed transfer
     estimates — the counterfactual decision the scheduler reports so the
@@ -117,6 +129,8 @@ def choose_mode(
         return "stream"
     if stop_s * safety * time_scale <= window_s:
         return "stop_copy"
+    if est.peer_ok:
+        return "peer_recover"
     return "checkpoint"
 
 
@@ -291,6 +305,16 @@ class DeadlineEstimator:
         # the decision can be compared to its uncompressed counterfactual
         transfer_s = wire_bytes / bw
         warm = self._pool_warm(target)
+        # peer_recover rung pricing (DESIGN.md §15): coverage from the
+        # controller's survivor-constrained plan (fail-stop geometry — the
+        # ranks beyond the target prefix die), donor bytes at measured
+        # bandwidth, lossless (the recovery stream never compresses).
+        # Duck-typed controllers without peer recovery price it
+        # unavailable and keep the checkpoint rung.
+        peer_ok, peer_bytes = False, 0
+        cov = getattr(self.ctrl, "peer_coverage", None)
+        if cov is not None:
+            peer_ok, peer_bytes = cov(target)
         return ReconfigEstimate(
             prepare_s=self.prepare_estimate(warm=warm),
             warm=warm,
@@ -308,6 +332,9 @@ class DeadlineEstimator:
             wire_bytes=wire_bytes,
             layers=layers,
             lossless_transfer_s=plan_bytes / bw,
+            peer_ok=peer_ok,
+            peer_bytes=peer_bytes,
+            peer_pause_s=self.prepare_estimate(warm=warm) + peer_bytes / bw,
         )
 
 
@@ -320,15 +347,21 @@ class PrefetchPolicy:
     """Fills the controller's warm world pool while the event loop is idle.
 
     Each ``tick`` (called by the scheduler on steps with no pending event)
-    asks the topology search for the likely next targets — the best
+    asks the topology search for the likely next targets — the failover
+    standby (:func:`failover_target`, the prefix-survivor world a
+    fail-stop would recover into, DESIGN.md §15) first, then the best
     feasible configurations at the walk-down/walk-up neighbor device
     counts of the current world (:func:`likely_next_targets`) — and starts
-    speculative builds via ``controller.prefetch_world``. The controller
-    enforces the guardrails: never while a real reconfiguration is in
-    flight, at most ``max_spec_builds`` concurrent compiles, skip targets
-    already pooled or building. Candidate enumeration is re-planned per
-    tick because the current world (and hence its neighbors) changes with
-    every commit; the search itself is metadata-only and cheap.
+    speculative builds via ``controller.prefetch_world``. Targets already
+    pooled get their transfer executables pre-compiled instead
+    (``controller.prewarm_transfer``), so a recovery into a warm world
+    pays neither the Prepare nor the first-pair reshard compiles. The
+    controller enforces the guardrails: never while a real reconfiguration
+    is in flight, at most ``max_spec_builds`` concurrent compiles, skip
+    targets already pooled or building. Candidate enumeration is
+    re-planned per tick because the current world (and hence its
+    neighbors) changes with every commit; the search itself is
+    metadata-only and cheap.
     """
 
     def __init__(
@@ -353,10 +386,13 @@ class PrefetchPolicy:
         self._cands: list = []
 
     def candidates(self) -> list:
-        from repro.core.topology_search import likely_next_targets
+        from repro.core.topology_search import (
+            failover_target,
+            likely_next_targets,
+        )
 
         ctrl = self.ctrl
-        return likely_next_targets(
+        cands = likely_next_targets(
             ctrl.cfg,
             ctrl.world.parallel,
             len(ctrl.devices),
@@ -366,13 +402,73 @@ class PrefetchPolicy:
             factors=self.factors,
             max_pp=self.max_pp,
         )
+        # failover standbys (DESIGN.md §15): the prefix-survivor worlds an
+        # unannounced fail-stop would recover into, chained one level (a
+        # failure can take more than one replica group). Keeping them warm
+        # ahead of the walk-down/walk-up guesses bounds the fail-stop
+        # pause to the transfer itself, never a cold Prepare — except a
+        # world_size-1 standby, which protects only against losing all but
+        # one device: it queues BEHIND the walk candidates so it cannot
+        # hog the single speculative-build slot right before a walk-up.
+        front: list = []
+        back: list = []
+        cur = ctrl.world.parallel
+        for _ in range(2):
+            cur = failover_target(
+                ctrl.cfg, cur, ctrl.global_batch, max_pp=self.max_pp
+            )
+            if cur is None or cur == ctrl.world.parallel:
+                break
+            (front if cur.world_size > 1 else back).append(cur)
+        seen = set(front) | set(back)
+        return front + [c for c in cands if c not in seen] + back
 
     def tick(self) -> int:
         """Start speculative builds for the current candidates; returns
         how many were started (0 when pooled/building/busy)."""
         if getattr(self.ctrl, "reconfig_pending", False):
-            return 0  # the controller would refuse anyway; skip the search
+            # builds would be refused mid-resize, but the INCOMING world's
+            # failover pairs can (and should) warm now: a window-0 event
+            # right after the commit pays any cold transfer compile inside
+            # its pause, and the post-commit gap is shorter than a compile
+            getattr(self.ctrl, "prewarm_failover_ahead", lambda: 0)()
+            return 0
         current = self.ctrl.world.parallel
+        # warm transfer pairs into already-pooled worlds FIRST: a window-0
+        # recovery pays any cold transfer compile inside its pause, while
+        # a standby world build overlaps training — the prewarm is
+        # pause-critical, the build is not. (pool_key index 1 is the
+        # ParallelConfig; keys built for another device fingerprint
+        # peek-miss inside prewarm_transfer)
+        pool = getattr(self.ctrl, "world_pool", None)
+        if pool is not None:
+            # only non-growing pairs: the zero-warning consumers of these
+            # executables are fail-stops, shrinks and same-size
+            # retopologies — grows come with warning windows and stream,
+            # so warming them here would spend the compile budget the
+            # standby build needs. Nearest-size first: a same-size
+            # retopology has zero capacity slack and is the likeliest
+            # window-0 target, deeper-shrink pairs only matter after
+            # deeper failures (prewarms run one at a time, so order is
+            # priority)
+            keys = sorted(
+                (
+                    k
+                    for k in pool.keys()
+                    if k[1] != current
+                    and k[1].world_size <= current.world_size
+                ),
+                key=lambda k: current.world_size - k[1].world_size,
+            )
+            for key in keys:
+                self.ctrl.prewarm_transfer(key[1])
+        # while a prewarm is compiling, hold off on starting new cold
+        # builds — two concurrent XLA compiles contend for the same host
+        # cores and both slow down, and only the prewarm is on the
+        # recovery-pause path
+        thread = getattr(self.ctrl, "_prewarm_thread", None)
+        if thread is not None and thread.is_alive():
+            return 0
         if current != self._cands_for:
             self._cands_for = current
             self._cands = self.candidates()
@@ -380,6 +476,11 @@ class PrefetchPolicy:
         for target in self._cands:
             if self.ctrl.prefetch_world(target):
                 started += 1
+            else:
+                # already pooled (or building): warm the TRANSFER
+                # executables for (current → target) too, so a recovery
+                # into this world pays neither compile (DESIGN.md §15)
+                self.ctrl.prewarm_transfer(target)
         self.started += started
         return started
 
@@ -398,7 +499,8 @@ class EventOutcome(ReuseRecordMixin):
     time_s: float
     window_s: float
     target: str
-    decision: str = ""  # stream | stop_copy | checkpoint | coalesce | cancel | noop
+    # stream | stop_copy | peer_recover | checkpoint | coalesce | cancel | noop
+    decision: str = ""
     # the counterfactual rung the lattice would have picked on the
     # uncompressed transfer estimate — differs from ``decision`` exactly
     # when the compressed wire promoted this event a rung (DESIGN.md §14)
@@ -414,7 +516,13 @@ class EventOutcome(ReuseRecordMixin):
     operating_point: Optional[dict] = None  # tuned data-plane parameters
 
     def to_dict(self) -> dict:
-        return dict(self.__dict__)
+        # non-finite floats (infinite warning windows) render as "inf" —
+        # ``json.dumps(float("inf"))`` emits non-standard ``Infinity``
+        d = dict(self.__dict__)
+        for k, v in d.items():
+            if isinstance(v, float) and not math.isfinite(v):
+                d[k] = "inf" if v > 0 else "-inf"
+        return d
 
 
 @dataclass
@@ -532,10 +640,17 @@ class ElasticScheduler:
         self.total_steps += 1
         self._absorb()
         self._enforce_deadline()
-        if self.prefetch is not None and self._pending is None:
+        if self.prefetch is not None and (
+            self._pending is None
+            or getattr(self.ctrl, "reconfig_pending", False)
+        ):
             # idle between events: warm the pool for the likely next
             # targets (speculative build threads; never during a real
-            # reconfiguration — the controller refuses then)
+            # reconfiguration — the controller refuses then). Mid-
+            # reconfiguration the tick still runs, but only stream-ahead
+            # prewarms the INCOMING world's failover pairs — that window
+            # is exactly when those pairs must compile for a window-0
+            # event right after the commit to find them warm
             self.prefetch.tick()
 
     def _advance_to(self, t: float) -> None:
@@ -588,8 +703,9 @@ class ElasticScheduler:
                 self._absorb()
                 return
         if self.clock > p.deadline:
-            # window missed with the shadow still building: last rung
-            if self.ctrl.ckpt_dir:
+            # window missed with the shadow still building: drop down the
+            # lattice — peer_recover when coverage holds, else checkpoint
+            if p.est.peer_ok or self.ctrl.ckpt_dir:
                 self.ctrl.cancel_resize(outcome="aborted")
                 self._restore(p.target, p.outcome, save_first=True)
                 p.outcome.met_deadline = False
@@ -598,31 +714,58 @@ class ElasticScheduler:
             # else: keep trying — the reconfig will land late (met_deadline
             # False) but the run survives; aborting gains nothing
 
-    # -- fallback rungs --------------------------------------------------
+    # -- recovery rungs ---------------------------------------------------
     def _restore(self, target, o: EventOutcome, save_first: bool) -> None:
-        """Checkpoint rung: durable save (when warned) + stop-and-restart.
+        """Below-stop-copy rungs for a *warned* event past its window:
+        durable save inside the window (belt, when a ckpt_dir exists),
+        then recover — the controller streams from peers when they cover
+        the state and demotes to the checkpoint restore itself.
 
         ``save_first`` doubles as the device-health signal: a warned event
         saves inside the window and its devices are fine (warm worlds stay
         valid); an unannounced fail-stop cannot save and its devices are
         suspect (``devices_failed`` purges overlapping pool entries)."""
-        if not self.ctrl.ckpt_dir:
-            o.outcome = "aborted"
-            return
-        if save_first:
+        if save_first and self.ctrl.ckpt_dir:
             self._clocked(self.ctrl.checkpoint_now)
+        self._recover(target, o, devices_failed=not save_first)
+
+    def _recover(
+        self,
+        target,
+        o: EventOutcome,
+        devices_failed: bool,
+        lost_ranks: tuple = (),
+    ) -> None:
+        """The peer_recover rung (DESIGN.md §15), checkpoint demoted.
+
+        For a warned event (``devices_failed=False``) the lost set is the
+        prefix-allocation complement of the target — the same geometry the
+        estimator priced — so the donor stream never reads a rank that is
+        about to vanish. The controller internally demotes to the durable
+        checkpoint when peers + parity cannot cover the state, and raises
+        :class:`RecoveryError` when no rung is left (retired as
+        ``aborted``)."""
+        if not devices_failed and not lost_ranks:
+            cur = self.ctrl.world.parallel.world_size
+            lost_ranks = tuple(range(target.world_size, cur))
         try:
             rec = self._clocked(
                 lambda: self.ctrl.fail_stop_recover(
-                    target, devices_failed=not save_first
+                    target,
+                    devices_failed=devices_failed,
+                    lost_ranks=tuple(lost_ranks),
                 )
             )
-        except AssertionError:
-            # unannounced failure before the first durable save landed:
-            # nothing to restore from — the honest outcome is an abort
+        except RecoveryError:
+            # no surviving replica, no fresh parity, no durable checkpoint:
+            # the honest outcome is an abort
+            o.decision = o.decision or "peer_recover"
             o.outcome = "aborted"
             return
-        o.outcome = "fell_back"
+        o.decision = (
+            "peer_recover" if rec.mode == "peer_recover" else "checkpoint"
+        )
+        o.outcome = rec.outcome
         o.mode = rec.mode
         o.commit_clock_s = self.clock
         o.pause_s = rec.total_pause_s
@@ -681,16 +824,24 @@ class ElasticScheduler:
         if p is not None:
             # a newer event supersedes the in-flight reconfiguration
             p.outcome.outcome = "retargeted"
-            if mode == "checkpoint":
+            if mode in ("checkpoint", "peer_recover"):
                 self.ctrl.cancel_resize(outcome="retargeted")
                 self._pending = None
-                self._restore(target, o, save_first=True)
+                if mode == "peer_recover":
+                    self._recover(target, o, devices_failed=False)
+                else:
+                    self._restore(target, o, save_first=True)
                 return
             gen = self._clocked(
                 lambda: self.ctrl.retarget_resize(
                     target, overlap=mode, operating_point=op
                 )
             )
+        elif mode == "peer_recover":
+            # no pre-deadline work needed: the survivors keep the state in
+            # memory — recover onto the target now, no disk round-trip
+            self._recover(target, o, devices_failed=False)
+            return
         elif mode == "checkpoint":
             self._restore(target, o, save_first=True)
             return
@@ -725,10 +876,12 @@ class ElasticScheduler:
                 o.outcome = "aborted"  # no feasible surviving topology
                 return
         o.target = target.describe()
-        o.decision = "checkpoint"
-        # unannounced: no pre-deadline save — recovery rolls back to the
-        # last durable checkpoint (invariant I4)
-        self._restore(target, o, save_first=False)
+        # unannounced: no pre-deadline save — source the survivor world's
+        # state from peer replicas (DESIGN.md §15); the durable checkpoint
+        # is the last-resort rung the controller demotes to on its own
+        self._recover(
+            target, o, devices_failed=True, lost_ranks=tuple(ev.lost_ranks)
+        )
 
     def _survivor_target(self, ev: FailStopEvent):
         """Largest feasible topology over the surviving devices: the naive

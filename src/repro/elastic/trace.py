@@ -26,12 +26,15 @@ def events_from_trace(
 ) -> list:
     """Convert trace rows into scheduler events.
 
-    Rows are ``(t, world)`` (the sim's classic shape), ``(t, world, kind)``
-    or ``(t, world, kind, warning_s)`` with ``kind in {"resize",
-    "fail_stop"}``. ``compress`` divides every time and warning window so a
-    multi-hour trace replays against the live controller in seconds (a
-    24 h / 47-event trace at ``compress=3600`` fires an event roughly every
-    half-minute of wall clock).
+    Rows are ``(t, world)`` (the sim's classic shape), ``(t, world, kind)``,
+    ``(t, world, kind, warning_s)`` or ``(t, world, kind, warning_s,
+    lost_ranks)`` with ``kind in {"resize", "fail_stop"}`` — the optional
+    fifth element (an iterable of rank ids, fail-stop rows only) pins WHICH
+    devices died, for fault-injection traces that need the peer-recovery
+    donor geometry to be deterministic. ``compress`` divides every time and
+    warning window so a multi-hour trace replays against the live
+    controller in seconds (a 24 h / 47-event trace at ``compress=3600``
+    fires an event roughly every half-minute of wall clock).
     """
     from repro.core.topology_search import best_target
 
@@ -48,7 +51,12 @@ def events_from_trace(
             )
         target = target_cache[world]
         if kind == "fail_stop":
-            events.append(FailStopEvent(time_s=t / compress, target=target))
+            lost = tuple(int(r) for r in row[4]) if len(row) > 4 else ()
+            events.append(
+                FailStopEvent(
+                    time_s=t / compress, target=target, lost_ranks=lost
+                )
+            )
         else:
             events.append(
                 ResizeEvent(

@@ -105,11 +105,11 @@ def main() -> None:
                   "(shadow prepare in background)", flush=True)
             ctrl.request_resize(target)
         if failstop and failstop[0] == ctrl.step:
-            print(f"[event] step {ctrl.step}: FAIL-STOP -> checkpoint fallback",
-                  flush=True)
+            print(f"[event] step {ctrl.step}: FAIL-STOP -> "
+                  f"{failstop[1].describe()}", flush=True)
             rec = ctrl.fail_stop_recover(failstop[1])
-            print(f"[event] recovered at step {ctrl.step} in "
-                  f"{rec.total_pause_s:.2f}s", flush=True)
+            print(f"[event] recovered via {rec.mode} at step {ctrl.step} "
+                  f"in {rec.total_pause_s:.2f}s", flush=True)
             failstop = None
         before = len(ctrl.records)
         losses += ctrl.train_steps(1)

@@ -18,6 +18,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Iterable, Optional, Protocol
 
+from repro.core.errors import RecoveryError
 from repro.core.intersection import TransferPlan, TransferTask
 from repro.reshard.chunking import chunk_task
 from repro.reshard.wire import wire_nbytes
@@ -184,6 +185,15 @@ class ReshardEngine:
         for dst_rank, dtasks in by_dst.items():
             staging_used = 0
             for task in dtasks:
+                if task.kind == "lost":
+                    # survivor-constrained plan with an unrepaired hole
+                    # (DESIGN.md §15): executing it would read a dead rank.
+                    raise RecoveryError(
+                        f"plan has a lost cell for {task.tensor} dst rank "
+                        f"{task.dst_rank} ({task.nbytes} bytes): no surviving "
+                        "source; repair from parity or fall back before "
+                        "executing"
+                    )
                 if task.resident:
                     if self.delta:
                         # bytes already in place: account, never chunk/move

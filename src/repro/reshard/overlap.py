@@ -59,6 +59,25 @@ def _layout_agrees(sh_old, sh_new, shape: tuple) -> bool:
         return False
 
 
+def _carry_alive(leaf) -> bool:
+    """True when every buffer backing ``leaf`` is still readable.
+    ``is_deleted()`` alone is not enough: a zero-copy alias shares
+    buffers with the leaf it aliases, and a donating train step deletes
+    those buffers without marking the alias object itself deleted."""
+    try:
+        if getattr(leaf, "is_deleted", None) and leaf.is_deleted():
+            return False
+        for s in getattr(leaf, "addressable_shards", ()):
+            data = s.data
+            if data is None:
+                return False
+            if hasattr(data, "is_deleted") and data.is_deleted():
+                return False
+    except Exception:
+        return False
+    return True
+
+
 @dataclass
 class OverlapReport(ReuseRecordMixin):
     # reused_layers / resident_layers / skipped_bytes come from the shared
@@ -173,7 +192,7 @@ class OverlapSession:
             spec = self.spec_map.get(name)
             if spec is None or tuple(leaf.shape) != tuple(spec.shape):
                 continue
-            if getattr(leaf, "is_deleted", None) and leaf.is_deleted():
+            if not _carry_alive(leaf):
                 # a superseded carry can be a zero-copy alias of a live
                 # leaf (resident pass-through) that a donating train step
                 # has since consumed — unadoptable, so its layers simply
@@ -189,12 +208,22 @@ class OverlapSession:
             # a matching pytree of shardings, so every mismatched carry
             # moves in a single dispatch instead of one host round-trip
             # per leaf
-            moved = jax.device_put(
-                [leaf for _, leaf, _ in relayout],
-                [sh for _, _, sh in relayout],
-            )
-            for (name, _, _), leaf in zip(relayout, moved):
-                self.executor.dst[name] = leaf
+            try:
+                moved = jax.device_put(
+                    [leaf for _, leaf, _ in relayout],
+                    [sh for _, _, sh in relayout],
+                )
+                for (name, _, _), leaf in zip(relayout, moved):
+                    self.executor.dst[name] = leaf
+            except RuntimeError:
+                # a carry died between the liveness probe and the dispatch
+                # (an alias whose shared buffers a train step donated);
+                # retry per-leaf so one dead carry doesn't void the batch
+                for name, leaf, sh in relayout:
+                    try:
+                        self.executor.dst[name] = jax.device_put(leaf, sh)
+                    except RuntimeError:
+                        adopted.discard(name)
         # a layer is reused iff the old session streamed it AND every
         # tensor its tasks touch has an adopted carry
         reused = [

@@ -42,19 +42,24 @@ def spot_trace(
     seed: int = 0,
     warning_s: float = 120.0,
     failstop_every: int = 5,
-) -> list[tuple[float, int, str, float]]:
+    emit_lost: bool = False,
+) -> list[tuple]:
     """Spot-market style event stream for the live scheduler (paper §4.1).
 
     Like :func:`make_trace` but each row carries an event kind and warning
     window: resizes arrive with the spot notice (AWS's 2-minute default);
     every ``failstop_every``-th event is an unannounced fail-stop dropping
-    to the smallest pool (warning 0 — invariant I4 territory). Rows are
-    ``(t, world, kind, warning_s)`` — ``elastic.events_from_trace`` turns
-    them into typed events with concrete topologies.
+    to the smallest pool (warning 0). Rows are ``(t, world, kind,
+    warning_s)`` — ``elastic.events_from_trace`` turns them into typed
+    events with concrete topologies. With ``emit_lost=True`` fail-stop rows
+    grow a fifth element naming the dead ranks (a seeded draw from the
+    pre-failure world's upper ranks) so fault-injection replays get a
+    deterministic peer-recovery donor geometry; resize rows keep the
+    4-tuple shape either way.
     """
     rng = np.random.default_rng(seed)
     t = 0.0
-    out: list[tuple[float, int, str, float]] = []
+    out: list[tuple] = []
     world = world_choices[-1]
     n = 0
     while True:
@@ -63,8 +68,19 @@ def spot_trace(
             break
         n += 1
         if failstop_every and n % failstop_every == 0:
+            prev = world
             world = min(world_choices)
-            out.append((t, world, "fail_stop", 0.0))
+            pool = list(range(world, prev))
+            if emit_lost and pool:
+                # prefix allocation: survivors are ranks 0..world-1, so the
+                # dead set is drawn from the complement [world, prev)
+                k = int(rng.integers(1, len(pool) + 1))
+                lost = tuple(
+                    sorted(int(r) for r in rng.choice(pool, size=k, replace=False))
+                )
+                out.append((t, world, "fail_stop", 0.0, lost))
+            else:
+                out.append((t, world, "fail_stop", 0.0))
         else:
             choices = [w for w in world_choices if w != world]
             world = int(rng.choice(choices))

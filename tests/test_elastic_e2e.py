@@ -1,6 +1,7 @@
 """End-to-end live reconfiguration on multi-device meshes (subprocess with 8
 host devices): the paper's §6.6 parity experiment, invariant I1 (training
-continues during prepare), fail-stop fallback (I4), and resize cancellation.
+continues during prepare), peer-replica fail-stop recovery with its demoted
+checkpoint rung (DESIGN.md §15), and resize cancellation.
 """
 
 from __future__ import annotations
@@ -89,7 +90,9 @@ def test_scale_in_and_machine_states(subproc):
     assert "SCALE_IN_OK" in out
 
 
-def test_failstop_fallback_checkpoint(subproc):
+def test_failstop_peer_recovery_keeps_step(subproc):
+    """A fail-stop with surviving DP replicas recovers from peers in
+    memory (DESIGN.md §15): no checkpoint read, NO step rollback."""
     out = subproc(
         """
         import tempfile, time
@@ -104,9 +107,41 @@ def test_failstop_fallback_checkpoint(subproc):
                                seq_len=16, global_batch=4,
                                ckpt_dir=ckpt, ckpt_interval=4)
         ctrl.train_steps(9)   # checkpoints at 4 and 8
-        step_before = ctrl.step
         rec = ctrl.fail_stop_recover(ParallelConfig(dp=1, tp=2))
-        assert rec.mode == "fallback"
+        assert rec.mode == "peer_recover", rec.mode
+        assert rec.outcome == "committed", rec.outcome
+        assert rec.lost_devices == 2, rec.lost_devices
+        assert ctrl.step == 9, f"step rolled back to {ctrl.step}"
+        assert ctrl.world.parallel.world_size == 2
+        ctrl.train_steps(2)
+        print("PEER_OK step=%d" % ctrl.step)
+        """,
+        n_devices=8,
+    )
+    assert "PEER_OK" in out
+
+
+def test_failstop_demotes_to_checkpoint_when_uncovered(subproc):
+    """dp=1, no parity snapshots: the dead ranks' tp shards have no
+    surviving replica, so the controller demotes to the durable rung —
+    which rolls back to the last checkpointed step."""
+    out = subproc(
+        """
+        import tempfile, time
+        from repro.configs import get_config
+        from repro.configs.base import ParallelConfig
+        from repro.core.controller import LiveRController
+        from repro.optim import AdamWConfig
+
+        cfg = get_config("qwen3-1.7b").reduced()
+        ckpt = tempfile.mkdtemp()
+        ctrl = LiveRController(cfg, ParallelConfig(dp=1, tp=4), AdamWConfig(),
+                               seq_len=16, global_batch=4,
+                               ckpt_dir=ckpt, ckpt_interval=4)
+        ctrl.train_steps(9)   # checkpoints at 4 and 8
+        rec = ctrl.fail_stop_recover(ParallelConfig(dp=1, tp=2))
+        assert rec.mode == "fallback", rec.mode
+        assert rec.outcome == "fell_back", rec.outcome
         assert ctrl.step == 8, f"resumed at {ctrl.step}, expected ckpt step 8"
         assert ctrl.world.parallel.world_size == 2
         ctrl.train_steps(2)
@@ -115,6 +150,33 @@ def test_failstop_fallback_checkpoint(subproc):
         n_devices=8,
     )
     assert "FALLBACK_OK" in out
+
+
+def test_failstop_without_ckpt_or_peers_raises_typed_error(subproc):
+    """No surviving replica, no parity, no ckpt_dir: a typed RecoveryError
+    (never a bare assert) so callers can degrade gracefully."""
+    out = subproc(
+        """
+        from repro.configs import get_config
+        from repro.configs.base import ParallelConfig
+        from repro.core.controller import LiveRController
+        from repro.core.errors import RecoveryError
+        from repro.optim import AdamWConfig
+
+        cfg = get_config("qwen3-1.7b").reduced()
+        ctrl = LiveRController(cfg, ParallelConfig(dp=1, tp=4), AdamWConfig(),
+                               seq_len=16, global_batch=4, ckpt_dir=None)
+        ctrl.train_steps(2)
+        try:
+            ctrl.fail_stop_recover(ParallelConfig(dp=1, tp=2))
+        except RecoveryError as e:
+            print("TYPED_OK", type(e).__name__)
+        else:
+            raise SystemExit("expected RecoveryError")
+        """,
+        n_devices=8,
+    )
+    assert "TYPED_OK" in out
 
 
 def test_cancel_stale_target(subproc):

@@ -41,6 +41,15 @@ def test_choose_mode_fallback_lattice():
     assert choose_mode(est, 12 * 1.25) == "stop_copy"
     assert choose_mode(est, 12 * 1.25 - 1e-6) == "checkpoint"
     assert choose_mode(est, 0.0) == "checkpoint"
+    # peer_recover rung (DESIGN.md §15): sits between stop-copy and
+    # checkpoint — it needs nothing inside the window, so any window the
+    # live rungs cannot cover routes to it whenever peers cover the state
+    import dataclasses
+
+    peer = dataclasses.replace(_est(), peer_ok=True)
+    assert choose_mode(peer, 12 * 1.25 - 1e-6) == "peer_recover"
+    assert choose_mode(peer, 0.0) == "peer_recover"
+    assert choose_mode(peer, 1e9) == "stream"  # live rungs still win
     # time_scale converts real estimates into trace units before comparing:
     # at scale 2 a 30 s window only covers the stop-copy rung (2x15)
     assert choose_mode(est, 30.0, time_scale=2.0) == "stop_copy"
@@ -101,12 +110,14 @@ class FakeController:
     """Minimal duck-typed LiveRController: a resize 'commits' after a fixed
     number of train steps; no JAX anywhere."""
 
-    def __init__(self, steps_to_commit=3, ckpt_dir=None, step_sleep=0.0):
+    def __init__(self, steps_to_commit=3, ckpt_dir=None, step_sleep=0.0,
+                 peer_ok=False):
         self.records: list[ReconfigRecord] = []
         self.iteration_times: list[float] = []
         self.ledger = GoodputLedger()
         self.step = 0
         self.ckpt_dir = ckpt_dir
+        self.peer_ok = peer_ok  # stand-in for surviving replica coverage
         self.stream_k = 4
         self.world = SimpleNamespace(parallel=ParallelConfig(dp=2), timings={})
         self.steps_to_commit = steps_to_commit
@@ -188,11 +199,23 @@ class FakeController:
     def checkpoint_now(self):
         pass
 
-    def fail_stop_recover(self, target, devices_failed=True):
+    def peer_coverage(self, target, lost_ranks=(), devices_failed=True):
+        return self.peer_ok, (1 << 20 if self.peer_ok else 0)
+
+    def fail_stop_recover(self, target, devices_failed=True, lost_ranks=()):
+        from repro.core.errors import RecoveryError
+
         self.last_devices_failed = devices_failed
+        self.last_lost_ranks = tuple(lost_ranks)
+        if self.peer_ok:
+            mode, outcome = "peer_recover", "committed"
+        elif self.ckpt_dir:
+            mode, outcome = "fallback", "fell_back"
+        else:
+            raise RecoveryError("no peers, no parity, no ckpt_dir")
         rec = ReconfigRecord(
             gen_id=-1, src=self.world.parallel.describe(),
-            dst=target.describe(), mode="fallback", outcome="fell_back",
+            dst=target.describe(), mode=mode, outcome=outcome,
             total_pause_s=0.01,
         )
         self.records.append(rec)
@@ -260,6 +283,45 @@ def test_checkpoint_rung_restores_when_durable():
     assert ctrl.world.parallel == target
     # warned event: the devices are fine — warm pool entries stay valid
     assert ctrl.last_devices_failed is False
+
+
+def test_zero_window_resize_uses_peer_rung_when_covered():
+    # a warned shrink whose window fits nothing live: with peer coverage
+    # the event commits through in-memory recovery — no durable save, no
+    # fell_back, and the devices are NOT marked failed (warm pool valid)
+    import dataclasses
+
+    ctrl = FakeController(peer_ok=True)  # ckpt_dir=None: peers only
+    est = dataclasses.replace(_est(), peer_ok=True)
+    target = ParallelConfig(dp=1)
+    rep = _sched(ctrl, estimator=StubEstimator(est)).run(
+        [ResizeEvent(time_s=0.0, target=target, warning_s=0.0)]
+    )
+    o = rep.outcomes[0]
+    assert (o.decision, o.outcome, o.mode) == (
+        "peer_recover", "committed", "peer_recover",
+    )
+    assert ctrl.world.parallel == target
+    assert ctrl.last_devices_failed is False
+    # warned shrink: the lost set is the prefix complement of the target
+    assert ctrl.last_lost_ranks == (1,)
+
+
+def test_failstop_routes_to_peer_recovery_when_covered():
+    ctrl = FakeController(steps_to_commit=50, peer_ok=True)
+    target = ParallelConfig(dp=1)
+    events = [
+        ResizeEvent(time_s=0.0, target=ParallelConfig(dp=4), warning_s=1e9),
+        FailStopEvent(time_s=0.0, target=target, lost_ranks=(1,)),
+    ]
+    rep = _sched(ctrl).run(events)
+    assert [o.outcome for o in rep.outcomes] == ["retargeted", "committed"]
+    assert rep.outcomes[1].decision == "peer_recover"
+    assert ctrl.world.parallel == target
+    assert ctrl._inflight is None
+    # unannounced: devices ARE suspect even on the peer path
+    assert ctrl.last_devices_failed is True
+    assert ctrl.last_lost_ranks == (1,)
 
 
 def test_failstop_routes_to_checkpoint_and_supersedes_pending():

@@ -293,14 +293,99 @@ def test_prefetch_policy_guardrails_with_stub_controller():
             return True
 
     policy = PrefetchPolicy(Ctrl(), k=2)
-    assert policy.tick() == 2 and policy.started == 2
-    assert len(calls) == 2 and len(set(calls)) == 2
+    # k likely-next targets plus the failover standby chain (DESIGN.md
+    # §15): the prefix-survivor standby leads the list — fail-stop
+    # readiness outranks walk guesses — while the world_size-1 chain tail
+    # queues last so it can't hog the build slot before a walk-up
+    assert policy.tick() == 4 and policy.started == 4
+    assert len(calls) == 4 and len(set(calls)) == 4
+    assert calls[0] == ParallelConfig(dp=1, tp=2)  # dp2xtp2 minus a replica
+    assert calls[-1] == ParallelConfig(dp=1, tp=1)  # ws1 standby queues last
     # idle ticks reuse the cached candidates (no re-search) until the
     # active world changes, and a pending reconfiguration skips entirely
     policy.candidates = None  # would raise if re-enumerated
-    assert policy.tick() == 2
+    assert policy.tick() == 4
     policy.ctrl.reconfig_pending = True
     assert policy.tick() == 0
+
+
+def test_failover_target_prefix_survivor_scheme():
+    from repro.configs import get_config
+    from repro.core.topology_search import failover_target
+
+    cfg = get_config("qwen3-1.7b").reduced()
+    # dp>1: drop one replica, same (pp, tp)
+    assert failover_target(cfg, ParallelConfig(dp=2, tp=2), 8) == \
+        ParallelConfig(dp=1, tp=2)
+    # dp-1 must divide the batch: dp=4 with batch 8 can't run dp=3,
+    # falls to the next feasible dp below
+    assert failover_target(cfg, ParallelConfig(dp=4, tp=2), 8) == \
+        ParallelConfig(dp=2, tp=2)
+    # dp=1: halve tp (the parity word repairs one dead tp group)
+    assert failover_target(cfg, ParallelConfig(dp=1, tp=4), 8) == \
+        ParallelConfig(dp=1, tp=2)
+    # single device: nothing to fail over to
+    assert failover_target(cfg, ParallelConfig(dp=1, tp=1), 8) is None
+
+
+def test_prefetch_tick_prewarms_pooled_transfer_pairs():
+    from repro.elastic import PrefetchPolicy
+
+    prewarmed = []
+
+    class Pool:
+        def keys(self):
+            # pool_key layout: (cfg, parallel, fingerprint, ...)
+            return [(None, ParallelConfig(dp=1, tp=4), (0, 1, 2, 3)),
+                    (None, ParallelConfig(dp=2, tp=2), (0, 1, 2, 3))]
+
+    class Ctrl:
+        def __init__(self):
+            from repro.configs import get_config
+
+            self.cfg = get_config("qwen3-1.7b").reduced()
+            self.world = SimpleNamespace(parallel=ParallelConfig(dp=2, tp=2))
+            self.devices = list(range(8))
+            self.global_batch, self.seq_len = 8, 32
+            self.world_pool = Pool()
+
+        def prefetch_world(self, target):
+            return False  # everything "already pooled/building"
+
+        def prewarm_transfer(self, target):
+            prewarmed.append(target)
+            return True
+
+    policy = PrefetchPolicy(Ctrl(), k=1)
+    assert policy.tick() == 0
+    # candidates that were already pooled get their transfer pair warmed,
+    # and so does every pooled same-size retopology — but never the
+    # current world itself
+    assert ParallelConfig(dp=1, tp=4) in prewarmed
+    assert ParallelConfig(dp=2, tp=2) not in prewarmed
+
+
+def test_prefetch_tick_streams_ahead_during_resize():
+    """Mid-resize ticks must warm the INCOMING world's failover pairs
+    (prewarm_failover_ahead) instead of doing nothing: a window-0 event
+    right after the commit pays any cold transfer compile in its pause."""
+    from repro.elastic import PrefetchPolicy
+
+    calls = []
+
+    class Ctrl:
+        reconfig_pending = True
+
+        def prewarm_failover_ahead(self):
+            calls.append("ahead")
+            return 1
+
+        def prefetch_world(self, target):  # must NOT be reached
+            raise AssertionError("no builds mid-resize")
+
+    policy = PrefetchPolicy(Ctrl(), k=1)
+    assert policy.tick() == 0
+    assert calls == ["ahead"]
 
 
 # ---------------------------------------------------------------------------
