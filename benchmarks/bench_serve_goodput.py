@@ -1,0 +1,151 @@
+"""Serving goodput across live resizes (DESIGN.md §16).
+
+Replays an elasticity trace with >= 2 resize events against the
+continuous-batching serve loop and measures what the paper's story means
+for inference: tokens/s served, dropped requests, p99 inter-token stall,
+and per-resize pause/bytes — next to an uninterrupted same-seed oracle
+run whose tokens the resized run must reproduce bit-for-bit.
+
+The two runs share one ``WorldPool``: the oracle's retired serving world
+is the warm start of the resized run (serving worlds are pool citizens),
+and the tp-preserving first resize must adopt the live KV cache in place
+(``cache_resident_layers > 0``, zero executed bytes).
+
+Results land in ``results/BENCH_serve_goodput.json``; ``--check`` exits
+nonzero when a request is dropped, token parity breaks, a resize fails to
+commit, or the tp-preserving resize moved cache bytes.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.common import emit, run_with_devices, write_results
+
+_SNIPPET = """
+import dataclasses, json
+import numpy as np
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig
+from repro.core.events import ResizeEvent
+from repro.core.world_pool import WorldPool
+from repro.serve import LiveServeController, ServeSession
+
+SMOKE = __SMOKE__
+cfg = get_config("qwen3-1.7b").reduced()
+pc = lambda dp, tp: ParallelConfig(dp=dp, pp=1, tp=tp, ep=1)
+N_SLOTS, PLEN = 4, 16
+GEN = 10 if SMOKE else 24
+N_REQ = 6 if SMOKE else 12
+MAX_SEQ = PLEN + GEN + 6
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg.vocab_size, PLEN) for _ in range(N_REQ)]
+
+# one pool for the whole benchmark: worlds retired by one session warm the
+# next (the oracle's dp2tp2 world becomes the resized run's initial world)
+pool = WorldPool(capacity=4)
+
+def run(trace):
+    ctrl = LiveServeController(cfg, pc(2, 2), N_SLOTS, PLEN, MAX_SEQ,
+                               pool=pool, sync_prepare=True, seed=0)
+    warm_init = bool(ctrl.active.timings.get("warm_hit", False))
+    sess = ServeSession(ctrl, step_time_s=1.0)
+    for p in prompts:
+        sess.submit(p, GEN)
+    results, m = sess.run(trace)
+    recs = list(ctrl.records)
+    ctrl.shutdown()
+    return results, m, recs, warm_init
+
+# oracle: no resizes, cold dp2tp2 build
+res_a, m_a, _, warm_a = run([])
+# resized: tp-preserving shrink mid-generation, then a tp-change
+trace = [ResizeEvent(time_s=3.0, target=pc(1, 2)),
+         ResizeEvent(time_s=6.0, target=pc(1, 1))]
+res_b, m_b, recs, warm_b = run(trace)
+
+parity = (set(res_a) == set(res_b)
+          and all(res_a[r] == res_b[r] for r in res_a))
+
+def mrow(m):
+    return {"tokens": m.tokens_emitted, "wall_s": m.wall_s,
+            "goodput_tok_s": m.goodput_tok_s, "p99_stall_s": m.p99_stall_s,
+            "max_stall_s": m.max_stall_s, "dropped": m.dropped,
+            "waves": m.waves, "commits": m.commits,
+            "requests_served": m.requests_served}
+
+doc = {
+    "arch": "qwen3-1.7b", "n_requests": N_REQ, "n_slots": N_SLOTS,
+    "prompt_len": PLEN, "gen": GEN,
+    "trace": [[e.time_s, e.target.describe()] for e in trace],
+    "oracle": mrow(m_a), "resized": mrow(m_b),
+    "token_parity": parity,
+    "oracle_init_warm": warm_a, "resized_init_warm": warm_b,
+    "records": [dataclasses.asdict(r) for r in recs],
+}
+print("JSON " + json.dumps(doc))
+"""
+
+
+def main(argv=()) -> None:
+    smoke = "--smoke" in argv
+    check = "--check" in argv
+    code = _SNIPPET.replace("__SMOKE__", repr(smoke))
+    out = run_with_devices(code, n_devices=8, timeout=1800)
+    payload = None
+    for line in out.splitlines():
+        if line.startswith("JSON "):
+            payload = json.loads(line[5:])
+    assert payload is not None, f"no JSON payload in bench output:\n{out[-2000:]}"
+
+    path = write_results("serve_goodput", payload, mode="smoke" if smoke else "full")
+
+    for tag in ("oracle", "resized"):
+        m = payload[tag]
+        emit(
+            f"serve_goodput/{tag}", m["p99_stall_s"] * 1e6,
+            f"goodput={m['goodput_tok_s']:.1f}tok/s;tokens={m['tokens']};"
+            f"dropped={m['dropped']};commits={m['commits']};"
+            f"max_stall_s={m['max_stall_s']:.3f}",
+        )
+    for r in payload["records"]:
+        emit(
+            f"serve_goodput/resize/{r['src']}->{r['dst']}", r["pause_s"] * 1e6,
+            f"cut_step={r['cut_step']};executed={r['executed_bytes']};"
+            f"net={r['plan_network_bytes']};"
+            f"cache_resident_layers={r['cache_resident_layers']};"
+            f"reused_layers={r['reused_layers']};warm={r['warm_hit']}",
+        )
+    emit(
+        "serve_goodput/parity", 0.0,
+        f"token_parity={payload['token_parity']};"
+        f"resized_init_warm={payload['resized_init_warm']}",
+    )
+    emit("serve_goodput/json", 0.0, path)
+
+    if check:
+        recs = payload["records"]
+        if len(recs) < 2:
+            raise SystemExit(f"expected >=2 committed resizes, got {len(recs)}")
+        if any(r["outcome"] != "committed" for r in recs):
+            raise SystemExit(f"uncommitted resize: {recs}")
+        if payload["resized"]["dropped"] != 0:
+            raise SystemExit(f"dropped requests: {payload['resized']['dropped']}")
+        if not payload["token_parity"]:
+            raise SystemExit("post-resize tokens diverged from the oracle run")
+        r1 = recs[0]  # dp2tp2 -> dp1tp2: tp-preserving
+        if r1["cache_resident_layers"] <= 0 or r1["reused_layers"] <= 0:
+            raise SystemExit(f"tp-preserving resize reused nothing: {r1}")
+        if r1["executed_bytes"] != 0 or r1["plan_network_bytes"] != 0:
+            raise SystemExit(f"tp-preserving resize moved cache bytes: {r1}")
+        if not any(r["executed_bytes"] > 0 for r in recs):
+            raise SystemExit("no resize exercised the reshard engine")
+        if not payload["resized_init_warm"]:
+            raise SystemExit("resized run did not warm-start from the pool")
+        if payload["resized"]["goodput_tok_s"] <= 0:
+            raise SystemExit("no goodput measured")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -28,6 +28,7 @@ BENCHES = [
     ("delta", "benchmarks.bench_delta"),
     ("goodput", "benchmarks.bench_goodput"),
     ("faults", "benchmarks.bench_faults"),
+    ("serve", "benchmarks.bench_serve_goodput"),
 ]
 
 

@@ -1,48 +1,21 @@
 """Batched serving example: prefill a prompt batch, decode autoregressively
-with the KV/SSD caches — across three architecture families.
+with the KV/SSD caches — across three architecture families, via the shared
+``repro.serve.driver`` harness.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
 
-import time
-
-import jax
-import jax.numpy as jnp
-
 from repro.configs import get_config
-from repro.models import model as M
+from repro.serve.driver import serve_once
 
 
 def serve(arch: str, batch_size=2, prompt_len=32, gen=8):
     cfg = get_config(arch).reduced()
-    params = M.init_params(cfg, jax.random.key(0))
-    horizon = prompt_len + gen
-    batch = {
-        "tokens": jax.random.randint(
-            jax.random.key(1), (batch_size, prompt_len), 0, cfg.vocab_size
-        )
-    }
-    if cfg.family == "encdec":
-        batch["frames"] = jax.random.normal(
-            jax.random.key(2), (batch_size, 16, cfg.d_model), jnp.float32
-        )
-    logits, cache, cross = M.prefill(cfg, params, batch, max_seq=horizon)
-    decode = jax.jit(
-        (lambda p, c, t, pos, x: M.decode_step(cfg, p, c, t, pos, x))
-        if cfg.family == "encdec"
-        else (lambda p, c, t, pos, x: M.decode_step(cfg, p, c, t, pos))
-    )
-    cur = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    out = [cur]
-    t0 = time.perf_counter()
-    for i in range(gen):
-        logits, cache = decode(params, cache, cur, jnp.int32(prompt_len + i), cross)
-        cur = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        out.append(cur)
-    jax.block_until_ready(cur)
-    toks = jnp.concatenate(out, axis=1)
+    out = serve_once(cfg, batch=batch_size, prompt_len=prompt_len, gen=gen)
+    toks = out["tokens"]
+    dt = out["prefill_s"] + out["decode_s"]
     print(f"{arch:26s} [{cfg.family:6s}] generated {toks.shape[1]} tokens/request "
-          f"in {time.perf_counter()-t0:.2f}s -> {[int(t) for t in toks[0][:8]]}")
+          f"in {dt:.2f}s -> {[int(t) for t in toks[0][:8]]}")
 
 
 if __name__ == "__main__":

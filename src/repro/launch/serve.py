@@ -2,12 +2,15 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --reduced \\
         --batch 4 --prompt-len 32 --gen 16
+
+Thin front-end over :func:`repro.serve.driver.serve_once`; the elastic
+serving path (resizes, cache migration) is exercised by
+``benchmarks/bench_serve_goodput.py``.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 
 def main() -> None:
@@ -20,57 +23,23 @@ def main() -> None:
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args()
 
-    import jax
-    import jax.numpy as jnp
-
     from repro.configs import get_config
-    from repro.configs.base import ParallelConfig
-    from repro.distribution.sharding import make_elastic_mesh
-    from repro.models import model as M
+    from repro.serve.driver import serve_once
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    horizon = args.prompt_len + args.gen
-    rng = jax.random.key(0)
-    params = M.init_params(cfg, rng)
-    tokens = jax.random.randint(
-        jax.random.key(1), (args.batch, args.prompt_len), 0, cfg.vocab_size
+    out = serve_once(
+        cfg,
+        batch=args.batch,
+        prompt_len=args.prompt_len,
+        gen=args.gen,
+        temperature=args.temperature,
     )
-    batch = {"tokens": tokens}
-    if cfg.family == "encdec":
-        batch["frames"] = jax.random.normal(
-            jax.random.key(2), (args.batch, 16, cfg.d_model), jnp.float32
-        )
-
-    t0 = time.perf_counter()
-    logits, cache, cross = M.prefill(cfg, params, batch, max_seq=horizon)
-    logits.block_until_ready()
-    prefill_s = time.perf_counter() - t0
-    print(f"[prefill] {args.batch}x{args.prompt_len} tokens in {prefill_s:.2f}s")
-
-    decode = jax.jit(
-        lambda p, c, t, pos, x: M.decode_step(cfg, p, c, t, pos, x)
-        if cfg.family == "encdec"
-        else M.decode_step(cfg, p, c, t, pos)
-    )
-    out_tokens = []
-    cur = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-    t0 = time.perf_counter()
-    for i in range(args.gen):
-        pos = jnp.int32(args.prompt_len + i)
-        logits, cache = decode(params, cache, cur, pos, cross)
-        if args.temperature > 0:
-            key = jax.random.fold_in(jax.random.key(7), i)
-            cur = jax.random.categorical(key, logits[:, -1] / args.temperature)[:, None]
-        else:
-            cur = jnp.argmax(logits[:, -1], axis=-1)[:, None]
-        out_tokens.append(cur)
-    jax.block_until_ready(cur)
-    dt = time.perf_counter() - t0
-    toks = jnp.concatenate(out_tokens, axis=1)
-    print(f"[decode] {args.gen} steps x batch {args.batch} in {dt:.2f}s "
-          f"({args.gen*args.batch/dt:.1f} tok/s incl. first-step compile)")
+    toks = out["tokens"]
+    print(f"[prefill] {args.batch}x{args.prompt_len} tokens in {out['prefill_s']:.2f}s")
+    print(f"[decode] {args.gen} steps x batch {args.batch} in {out['decode_s']:.2f}s "
+          f"({args.gen*args.batch/out['decode_s']:.1f} tok/s incl. first-step compile)")
     print("[sample] first request tokens:", [int(t) for t in toks[0][:12]])
 
 

@@ -1,0 +1,44 @@
+"""Elastic decode serving (DESIGN.md §16).
+
+Continuous-batching serve loop over a pool-warmed :class:`WorldHandle`,
+with live mid-generation resizes: the KV/SSD cache pytree is planned and
+streamed by the same intersection-planner → ReshardEngine pipeline as
+parameters, so in-flight requests survive topology changes token-for-token
+instead of being dropped and re-prefilled.
+"""
+
+from repro.serve.cache_view import (
+    cache_tensor_specs,
+    named_serve_leaves,
+    rebuild_serve_state,
+    role_sharding,
+    serve_plan,
+    serve_state_specs,
+    target_shardings_by_name,
+)
+from repro.serve.controller import LiveServeController, ServeRecord
+from repro.serve.driver import demo_batch, serve_once
+from repro.serve.loop import ServeMetrics, ServeSession
+from repro.serve.slots import plan_admission, Request, RequestQueue, SlotAllocator
+from repro.serve.world import build_serve_world
+
+__all__ = [
+    "LiveServeController",
+    "Request",
+    "RequestQueue",
+    "ServeMetrics",
+    "ServeRecord",
+    "ServeSession",
+    "SlotAllocator",
+    "build_serve_world",
+    "cache_tensor_specs",
+    "demo_batch",
+    "named_serve_leaves",
+    "plan_admission",
+    "rebuild_serve_state",
+    "role_sharding",
+    "serve_once",
+    "serve_plan",
+    "serve_state_specs",
+    "target_shardings_by_name",
+]

@@ -1,0 +1,87 @@
+"""Shared prefill/decode demo driver.
+
+One copy of the prompt-batch → prefill → autoregressive-decode loop that
+``launch/serve.py`` and ``examples/serve_decode.py`` used to duplicate.
+Single-world (no mesh, no resizes) — the elastic path lives in
+``serve.loop``/``serve.controller``; this is the minimal serving harness
+the stubs needed.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["demo_batch", "serve_once"]
+
+
+def demo_batch(cfg: ModelConfig, batch: int, prompt_len: int, frames_len: int = 16):
+    """Deterministic synthetic prompt batch (keys match the seed stubs)."""
+    import jax
+    import jax.numpy as jnp
+
+    out = {
+        "tokens": jax.random.randint(
+            jax.random.key(1), (batch, prompt_len), 0, cfg.vocab_size
+        )
+    }
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(
+            jax.random.key(2), (batch, frames_len, cfg.d_model), jnp.float32
+        )
+    return out
+
+
+def serve_once(
+    cfg: ModelConfig,
+    batch: int = 4,
+    prompt_len: int = 32,
+    gen: int = 16,
+    temperature: float = 0.0,
+    seed: int = 0,
+):
+    """Prefill a prompt batch and decode ``gen`` tokens per request.
+
+    Returns ``{"tokens": (batch, gen+1) np.ndarray, "prefill_s": float,
+    "decode_s": float}`` — the first column is the token argmaxed from the
+    prefill logits, the rest are decode-loop emissions.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import model as M
+
+    horizon = prompt_len + gen
+    params = M.init_params(cfg, jax.random.key(seed))
+    inputs = demo_batch(cfg, batch, prompt_len)
+
+    t0 = time.perf_counter()
+    logits, cache, cross = M.prefill(cfg, params, inputs, max_seq=horizon)
+    logits.block_until_ready()
+    prefill_s = time.perf_counter() - t0
+
+    decode = jax.jit(
+        (lambda p, c, t, pos, x: M.decode_step(cfg, p, c, t, pos, x))
+        if cfg.family == "encdec"
+        else (lambda p, c, t, pos, x: M.decode_step(cfg, p, c, t, pos))
+    )
+    cur = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    out = [cur]
+    t0 = time.perf_counter()
+    for i in range(gen):
+        logits, cache = decode(params, cache, cur, jnp.int32(prompt_len + i), cross)
+        if temperature > 0:
+            key = jax.random.fold_in(jax.random.key(7), i)
+            cur = jax.random.categorical(key, logits[:, -1] / temperature)[:, None]
+        else:
+            cur = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        out.append(cur)
+    jax.block_until_ready(cur)
+    decode_s = time.perf_counter() - t0
+    return {
+        "tokens": np.asarray(jnp.concatenate(out, axis=1)),
+        "prefill_s": prefill_s,
+        "decode_s": decode_s,
+    }

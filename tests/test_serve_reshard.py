@@ -1,0 +1,182 @@
+"""Serving-state migration: the KV/SSD cache pytree moves through the SAME
+intersection-planner -> ReshardEngine pipeline as params, byte-identical
+between the SimExecutor oracle and the LiveExecutor, with delta
+classification making tp-preserving resizes free (0 executed bytes)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig
+from repro.serve.cache_view import (
+    cache_tensor_specs,
+    named_serve_leaves,
+    serve_plan,
+    serve_state_specs,
+)
+from repro.utils.pytree import tree_paths
+
+FAMILY_ARCHS = ["qwen3-1.7b", "mamba2-2.7b", "seamless-m4t-large-v2"]
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS + ["mixtral-8x7b"])
+def test_cache_specs_match_cache_pytree(arch):
+    """Every decode-cache leaf (kvcache.init_cache layout, incl. cross-KV)
+    has a spec with exactly its shape/dtype under the resource-view name
+    that named_serve_leaves assigns — the contract that lets one plan cover
+    the live cache."""
+    from repro.models import kvcache
+
+    cfg = get_config(arch).reduced()
+    batch, max_seq, cross_len = 2, 16, 8
+    specs = {
+        s.name: s
+        for s in cache_tensor_specs(
+            cfg, batch, max_seq, cache_dtype="float32", cross_len=cross_len
+        )
+    }
+    cache = jax.eval_shape(
+        lambda: kvcache.init_cache(cfg, batch, max_seq, np.float32)
+    )
+    cross = None
+    if cfg.family == "encdec":
+        cross = jax.eval_shape(
+            lambda: kvcache.init_cross_kv(cfg, batch, cross_len, np.float32)
+        )
+    named = {}
+    for path, leaf in tree_paths(cache).items():
+        named[f"cache/{path}"] = leaf
+    for path, leaf in tree_paths(cross or {}).items():
+        named[f"cross/{path}"] = leaf
+    assert set(named) == set(specs)
+    for name, leaf in named.items():
+        assert specs[name].shape == tuple(leaf.shape), name
+        assert np.dtype(specs[name].dtype) == np.dtype(leaf.dtype), name
+        assert len(specs[name].roles) == len(leaf.shape), name
+        assert specs[name].roles[0] == "pp", name  # stacked period axis
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_tp_preserving_resize_is_fully_resident(arch):
+    """The serving residency invariant (DESIGN.md §16): no serving-state
+    spec carries a dp role, so any resize that preserves the tp degree
+    classifies params AND cache fully resident — zero planned movement."""
+    cfg = get_config(arch).reduced()
+    cross = 8 if cfg.family == "encdec" else 0
+    specs = serve_state_specs(cfg, 2, 16, cache_dtype="float32", cross_len=cross)
+    assert all("dp" not in s.roles for s in specs)
+    plan = serve_plan(
+        cfg, specs, ParallelConfig(dp=2, tp=2), ParallelConfig(dp=1, tp=2)
+    )
+    assert plan.network_bytes == 0 and plan.local_bytes == 0
+    assert plan.resident_bytes > 0
+    assert plan.resident_layers() == plan.layers()
+    # and a dp-GROW only broadcasts: surviving ranks keep their shards
+    grow = serve_plan(
+        cfg, specs, ParallelConfig(dp=1, tp=2), ParallelConfig(dp=2, tp=2)
+    )
+    assert grow.network_bytes > 0
+    assert grow.resident_bytes > 0
+
+
+def test_named_serve_leaves_handles_params_only():
+    named = named_serve_leaves({"w": np.zeros(2)}, None, None)
+    assert list(named) == ["params/w"]
+
+
+# Cross-backend cache-migration parity in a subprocess with 8 host devices:
+# one plan, executed by SimExecutor over per-rank numpy shards and by
+# LiveExecutor over globally-sharded jax.Arrays — destination shards must
+# be byte-identical for every target rank, across a tp-change, a dp-change,
+# and a tp-preserving (resident-skip) resize, for attn AND ssm caches.
+_CACHE_PARITY_SNIPPET = """
+import dataclasses
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig
+from repro.core.resource_view import view_of
+from repro.core.streaming import allocate_destination, execute_plan, materialize_rank
+from repro.distribution.sharding import make_elastic_mesh
+from repro.reshard import LiveExecutor, ReshardEngine
+from repro.serve.cache_view import cache_tensor_specs, role_sharding, serve_plan
+
+TRANSITIONS = [
+    ("tp_change",   ParallelConfig(dp=1, tp=2), ParallelConfig(dp=1, tp=4)),
+    ("dp_change",   ParallelConfig(dp=1, tp=2), ParallelConfig(dp=2, tp=2)),
+    ("tp_preserve", ParallelConfig(dp=2, tp=2), ParallelConfig(dp=1, tp=2)),
+]
+BUDGET = 8192
+for arch in ("qwen3-1.7b", "mamba2-2.7b"):
+    cfg = get_config(arch).reduced()
+    if cfg.family != "ssm":
+        # 4 kv heads so the tp4 leg splits heads evenly
+        cfg = dataclasses.replace(cfg, num_kv_heads=4, num_heads=4)
+    specs = cache_tensor_specs(cfg, 4, 32, cache_dtype="float32")
+    rng = np.random.default_rng(0)
+    g = {s.name: rng.normal(size=s.shape).astype(s.dtype) for s in specs}
+    for name, ca, cb in TRANSITIONS:
+        plan = serve_plan(cfg, specs, ca, cb)
+        # oracle: simulated ranks
+        src = {r: materialize_rank(specs, ca, r, g) for r in range(ca.world_size)}
+        dst = {r: allocate_destination(specs, cb, r) for r in range(cb.world_size)}
+        sim_stats = execute_plan(plan, src, dst, staging_bytes=BUDGET)
+        # live: global jax.Arrays, role-derived shardings on mesh_a -> mesh_b
+        mesh_a, mesh_b = make_elastic_mesh(ca), make_elastic_mesh(cb)
+        live_src = {s.name: jax.device_put(jnp.asarray(g[s.name]),
+                                           role_sharding(s, mesh_a))
+                    for s in specs}
+        targets = {s.name: role_sharding(s, mesh_b) for s in specs}
+        ex = LiveExecutor({s.name: s for s in specs}, live_src, targets, BUDGET)
+        live_stats = ReshardEngine(plan, ex, staging_bytes=BUDGET).run()
+        ex.block_until_ready()
+        # identical engine-side accounting from both backends
+        assert live_stats.network_bytes == sim_stats.network_bytes, (arch, name)
+        assert live_stats.local_bytes == sim_stats.local_bytes, (arch, name)
+        assert live_stats.resident_bytes == sim_stats.resident_bytes, (arch, name)
+        assert live_stats.layers_streamed == sim_stats.layers_streamed, (arch, name)
+        live_stats.assert_bounded(BUDGET)
+        # byte-identical destination shards on every target rank
+        for s in specs:
+            got = np.asarray(jax.device_get(ex.results()[s.name]))
+            np.testing.assert_array_equal(got, g[s.name], err_msg=f"{name}/{s.name}")
+            for r in range(cb.world_size):
+                v = view_of(s, cb, r)
+                if v is None or s.name not in dst[r].shards:
+                    continue
+                sl = tuple(slice(lo, hi) for lo, hi in v.bounds)
+                np.testing.assert_array_equal(
+                    got[sl], dst[r].shards[s.name],
+                    err_msg=f"{name}/{s.name}/rank{r}")
+        if name == "tp_preserve":
+            # resident-skip: zero planned movement, zero executed bytes on
+            # BOTH backends, aliasing pass-throughs only
+            assert plan.network_bytes == 0 and plan.local_bytes == 0, arch
+            assert sim_stats.executed_bytes == 0, sim_stats.executed_bytes
+            assert live_stats.executed_bytes == 0, live_stats.executed_bytes
+            assert ex.resident_passthroughs > 0
+            # delta=False baseline physically moves every cache byte
+            ex_b = LiveExecutor({s.name: s for s in specs}, live_src,
+                                targets, BUDGET)
+            base = ReshardEngine(plan, ex_b, staging_bytes=BUDGET,
+                                 delta=False).run()
+            ex_b.block_until_ready()
+            assert base.resident_bytes == 0
+            assert base.local_bytes == plan.resident_bytes
+            assert ex_b.executed_bytes > 0
+            for s in specs:
+                got = np.asarray(jax.device_get(ex_b.results()[s.name]))
+                np.testing.assert_array_equal(got, g[s.name])
+        print("CACHE_PARITY_OK", arch, name)
+print("ALL_OK")
+"""
+
+
+def test_cache_migration_live_matches_sim(subproc):
+    out = subproc(_CACHE_PARITY_SNIPPET, n_devices=8)
+    assert "ALL_OK" in out
+    assert out.count("CACHE_PARITY_OK") == 6
