@@ -1,0 +1,254 @@
+"""Fleet arbitration benchmark (DESIGN.md §18, ROADMAP item 4): N jobs
+over one volatile device pool, three allocation policies on the SAME
+seeded capacity trace.
+
+Phase A (all-sim) runs the :class:`FleetArbiter` against closed-form
+:class:`SimEndpoint` jobs on the shared DES clock — every job speaks the
+wire protocol through ``WireEndpoint`` (serialized both legs), so the
+phase also measures control-plane traffic at fleet scale. The metric is
+cluster-wide goodput: total samples over what a zero-reconfig-cost
+marginal allocation of the same capacity profile would have produced.
+Static strands every capacity grow, fair-share adapts but ignores the
+scaling curves, marginal water-fills on them.
+
+Phase B (smoke only, mixed live+sim) plans the same arbitration over a
+small fleet containing one REAL ``LiveRController`` job on 8 host
+devices: ``FleetArbiter.plan_assignments`` turns policy decisions into
+per-job event lists, the live job replays its list through the unmodified
+``ElasticScheduler`` over the wire codec, the sim jobs replay theirs on
+virtual clocks. Per-job goodput is reported for both.
+
+``--smoke``: 6 sim jobs + the mixed leg; ``--check`` exits nonzero
+unless phase A arbitrated >= 3 jobs with >= 10 per-job decisions and the
+marginal policy's cluster goodput strictly beats BOTH baselines on the
+same trace, and phase B committed >= 1 live resize with zero aborts.
+Full mode scales phase A to 24 all-sim jobs (the 100-job regime is the
+same code path; 24 keeps CI latency sane). Results land in
+``results/BENCH_fleet.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from benchmarks.common import Timed, emit, run_with_devices, write_results
+
+# params mix spanning ~50x so the marginal curves genuinely differ
+_PARAMS_MIX = (0.4e9, 0.8e9, 1.4e9, 2.8e9, 7e9, 14e9)
+_FEASIBLE = (1, 2, 3, 4, 6, 8, 12, 16, 24)
+_POLICIES = ("static", "fair_share", "marginal")
+
+
+def _phase_a(n_jobs: int):
+    """All-sim fleet: one seeded capacity trace, three policies."""
+    from repro.configs.base import ParallelConfig
+    from repro.elastic.endpoint import SimEndpoint, WireEndpoint
+    from repro.fleet import FleetArbiter, FleetJob, make_policy
+    from repro.sim.des import Simulator
+    from repro.sim.volatility import spot_trace
+
+    duration_s = 4 * 3600.0
+    # admission at the pool's low point: most trace levels are GROWTH,
+    # which static strands by construction, fair-share claims blindly and
+    # marginal water-fills; shrinks + unannounced failures still occur
+    # (failstop_every) to force recovery arbitration
+    initial = 2 * n_jobs
+    choices = tuple(sorted({initial, 3 * n_jobs, 4 * n_jobs,
+                            5 * n_jobs, 7 * n_jobs}))
+    trace = spot_trace(duration_s, 20 * 60, world_choices=choices, seed=17,
+                       warning_s=120.0, failstop_every=4)
+
+    def build(policy):
+        sim = Simulator()
+        jobs = []
+        for i in range(n_jobs):
+            params = _PARAMS_MIX[i % len(_PARAMS_MIX)]
+            ep = WireEndpoint(SimEndpoint(
+                f"job{i:02d}", params=params, global_batch=256,
+                parallel=ParallelConfig(dp=4), sim=sim,
+            ))
+            jobs.append(FleetJob(
+                name=f"job{i:02d}", endpoint=ep, params=params,
+                global_batch=256, feasible_worlds=_FEASIBLE,
+            ))
+        return FleetArbiter(jobs, make_policy(policy), sim=sim)
+
+    out = {"n_jobs": n_jobs, "trace_rows": len(trace),
+           "duration_s": duration_s, "initial_capacity": initial,
+           "policies": {}}
+    for policy in _POLICIES:
+        arb = build(policy)
+        with Timed() as t:
+            rep = arb.run(trace, duration_s=duration_s,
+                          initial_capacity=initial)
+        doc = rep.to_dict()
+        doc["events"] = doc["events"][:200]  # cap artifact size
+        doc["wire"] = {
+            "commands": sum(j.endpoint.commands for j in arb.jobs),
+            "bytes_tx": sum(j.endpoint.bytes_tx for j in arb.jobs),
+            "bytes_rx": sum(j.endpoint.bytes_rx for j in arb.jobs),
+        }
+        doc["wall_us"] = t.us
+        out["policies"][policy] = doc
+    return out
+
+
+_MIXED_SNIPPET = """
+import json, tempfile
+from repro.configs import get_config
+from repro.configs.base import ParallelConfig
+from repro.core.controller import LiveRController
+from repro.core.topology_search import best_target
+from repro.elastic import (
+    ControllerEndpoint, DeadlineEstimator, ElasticScheduler, SimEndpoint,
+    WireEndpoint,
+)
+from repro.elastic import protocol as P
+from repro.fleet import FleetArbiter, FleetJob, make_policy
+from repro.optim import AdamWConfig
+
+cfg = get_config("qwen3-1.7b").reduced()
+ctrl = LiveRController(
+    cfg, ParallelConfig(dp=2, tp=2), AdamWConfig(learning_rate=1e-3),
+    seq_len=32, global_batch=8, overlap="stop_copy", sync_compile=True,
+)
+ctrl.train_steps(4)  # seed iteration timings for the estimator
+
+live_ep = WireEndpoint(ControllerEndpoint(ctrl))
+TARGETS = {w: best_target(cfg, w, 8, 32, max_pp=1) for w in (2, 4, 8)}
+sim_eps = {}
+jobs = [
+    FleetJob(name="live", endpoint=live_ep, params=float(cfg.param_count()),
+             global_batch=8, feasible_worlds=(2, 4, 8),
+             target_fn=lambda w: TARGETS[w]),
+]
+for i, params in enumerate((0.8e9, 7e9)):
+    ep = WireEndpoint(SimEndpoint(f"sim{i}", params=params, global_batch=256,
+                                  parallel=ParallelConfig(dp=4)))
+    sim_eps[f"sim{i}"] = ep
+    jobs.append(FleetJob(name=f"sim{i}", endpoint=ep, params=params,
+                         global_batch=256, feasible_worlds=(1, 2, 4, 8)))
+
+# one shared capacity trace for the 3-job fleet (12 devices initially);
+# times are wall seconds for the live replay, so they stay small
+TRACE = [(8.0, 16, "resize", 1e9), (16.0, 8, "resize", 1e9),
+         (24.0, 12, "resize", 1e9)]
+arb = FleetArbiter(jobs, make_policy("marginal"), calibrate=False)
+plans = arb.plan_assignments(TRACE, initial_capacity=12,
+                             default_warning_s=1e9)
+
+# live job: replay its assignment through the unmodified single-job
+# scheduler, over the wire codec, on the wall clock
+live_events = plans["live"]
+rep = ElasticScheduler(
+    live_ep, estimator=DeadlineEstimator(ctrl), sync_prepare=True,
+    tail_steps=2, max_steps=20_000,
+).run(live_events)
+
+doc = {
+    "live": {
+        "events": [o.to_dict() for o in rep.outcomes],
+        "committed": sum(1 for o in rep.outcomes if o.outcome == "committed"),
+        "aborted": rep.aborted,
+        "goodput": rep.goodput,
+        "world": ctrl.world.parallel.world_size,
+        "wire_commands": live_ep.commands,
+    },
+    "sim": {},
+}
+# sim jobs: replay theirs on their own virtual clocks
+for name, events in plans.items():
+    if name == "live":
+        continue
+    ep = sim_eps[name]
+    srep = ElasticScheduler(ep, tail_steps=2).run(events)
+    ledger = ep.handle(P.QueryLedger())
+    doc["sim"][name] = {
+        "committed": sum(1 for o in srep.outcomes
+                         if o.outcome == "committed"),
+        "aborted": srep.aborted,
+        "goodput": ledger.goodput,
+        "samples": ledger.samples,
+    }
+print("JSON " + json.dumps(doc))
+"""
+
+
+def main(argv=()) -> None:
+    smoke = "--smoke" in argv
+    check = "--check" in argv
+
+    n_jobs = 6 if smoke else 24
+    phase_a = _phase_a(n_jobs)
+    payload = {"phase_a": phase_a}
+
+    if smoke:
+        out = run_with_devices(_MIXED_SNIPPET, n_devices=8, timeout=1800)
+        mixed = None
+        for line in out.splitlines():
+            if line.startswith("JSON "):
+                mixed = json.loads(line[5:])
+        assert mixed is not None, f"no JSON in mixed leg:\n{out[-2000:]}"
+        payload["mixed"] = mixed
+
+    path = write_results("fleet", payload, mode="smoke" if smoke else "full")
+
+    pols = phase_a["policies"]
+    for policy in _POLICIES:
+        doc = pols[policy]
+        emit(
+            f"fleet/{policy}", doc["wall_us"],
+            f"goodput={doc['cluster_goodput']*100:.1f}%;"
+            f"events={doc['arbitrated_events']};"
+            f"samples={doc['total_samples']:.0f};"
+            f"wire_cmds={doc['wire']['commands']}",
+        )
+    emit(
+        "fleet/gain_vs_static", 0.0,
+        f"{(pols['marginal']['cluster_goodput'] - pols['static']['cluster_goodput'])*100:+.1f}pp"
+        f" over {n_jobs} jobs, {phase_a['trace_rows']} trace rows",
+    )
+    if smoke:
+        live = payload["mixed"]["live"]
+        emit(
+            "fleet/mixed_live", 0.0,
+            f"committed={live['committed']};aborted={live['aborted']};"
+            f"goodput={live['goodput']};world={live['world']}",
+        )
+    emit("fleet/json", 0.0, path)
+
+    if check:
+        if phase_a["n_jobs"] < 3:
+            raise SystemExit(f"CHECK FAIL: only {phase_a['n_jobs']} jobs")
+        # the gate counts the curve-aware policy's decisions: the static
+        # baseline ignores growth by construction, so it legitimately
+        # arbitrates almost nothing
+        if pols["marginal"]["arbitrated_events"] < 10:
+            raise SystemExit(
+                "CHECK FAIL: marginal arbitrated only "
+                f"{pols['marginal']['arbitrated_events']} events (< 10)"
+            )
+        marg = pols["marginal"]["cluster_goodput"]
+        for baseline in ("static", "fair_share"):
+            base = pols[baseline]["cluster_goodput"]
+            if not marg > base:
+                raise SystemExit(
+                    f"CHECK FAIL: marginal ({marg:.4f}) must strictly beat "
+                    f"{baseline} ({base:.4f}) on the same trace"
+                )
+        if smoke:
+            live = payload["mixed"]["live"]
+            if live["committed"] < 1 or live["aborted"] != 0:
+                raise SystemExit(
+                    f"CHECK FAIL: mixed live leg committed="
+                    f"{live['committed']} aborted={live['aborted']}"
+                )
+            for name, job in payload["mixed"]["sim"].items():
+                if job["aborted"] != 0:
+                    raise SystemExit(f"CHECK FAIL: sim job {name} aborted")
+        print("CHECK OK", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -29,11 +29,22 @@ BENCHES = [
     ("goodput", "benchmarks.bench_goodput"),
     ("faults", "benchmarks.bench_faults"),
     ("serve", "benchmarks.bench_serve_goodput"),
+    ("fleet", "benchmarks.bench_fleet"),
 ]
 
 
 def main() -> None:
-    tags = set(sys.argv[1:])
+    args = sys.argv[1:]
+    if "--help" in args or "-h" in args:
+        print(__doc__.strip())
+        print("\nTags:")
+        for tag, module in BENCHES:
+            print(f"  {tag:10s} {module}")
+        return
+    tags = set(args)
+    unknown = tags - {tag for tag, _ in BENCHES}
+    if unknown:
+        sys.exit(f"unknown tags {sorted(unknown)}; run with --help for the list")
     print("name,us_per_call,derived")
     failures = []
     for tag, module in BENCHES:

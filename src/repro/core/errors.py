@@ -1,4 +1,4 @@
-"""Typed recovery errors (DESIGN.md §15).
+"""Typed control-plane errors (DESIGN.md §15, §17).
 
 ``RecoveryError`` replaces the bare ``assert self.ckpt_dir`` that used to
 guard ``fail_stop_recover``: asserts vanish under ``python -O``, and the
@@ -17,3 +17,18 @@ from __future__ import annotations
 
 class RecoveryError(RuntimeError):
     """No recovery rung can restore the state; fail loudly with context."""
+
+
+class ProtocolError(RuntimeError):
+    """Malformed or unsupported control-plane message (DESIGN.md §17):
+    unknown type tag, missing required field, or a schema version newer
+    than this decoder. Also raised driver-side when an endpoint answers a
+    command with an unexpected ``ErrorResponse``."""
+
+
+class TraceError(ValueError):
+    """Malformed volatility-trace row (``elastic/trace.py``): unknown
+    event kind, non-positive device count, negative/NaN warning window or
+    timestamp, or invalid lost-rank list. Raised at trace-load time so a
+    bad row fails the replay up front instead of mid-run with an opaque
+    topology-search error."""

@@ -2,14 +2,27 @@
 
 The controller executes ONE reconfiguration; this package turns streams of
 elasticity events — spot-market warnings, preemptions, fail-stops — into
-deadline-aware decisions over the live :class:`LiveRController`: overlapped
-streaming when the warning window allows, stop-copy when it is tight,
-peer-replica recovery when the window is gone but survivors still cover the
-state (DESIGN.md §15), durable checkpoint only when nothing else fits
-(DESIGN.md §10).
+deadline-aware decisions, spoken over a serializable command/response
+protocol (``protocol.py``, DESIGN.md §17) to an endpoint
+(``endpoint.py``) fronting the live :class:`LiveRController`, the serving
+controller, or a calibrated DES model: overlapped streaming when the
+warning window allows, stop-copy when it is tight, peer-replica recovery
+when the window is gone but survivors still cover the state (DESIGN.md
+§15), durable checkpoint only when nothing else fits (DESIGN.md §10).
 """
 
+from repro.elastic.endpoint import (
+    ControllerEndpoint,
+    DeadlineEstimator,
+    Endpoint,
+    PrefetchPolicy,
+    ServeEndpoint,
+    SimEndpoint,
+    WireEndpoint,
+    as_endpoint,
+)
 from repro.elastic.faults import FaultInjector, InjectionReport, controller_phase
+from repro.elastic.protocol import ReconfigEstimate, RecordView
 from repro.elastic.redundancy import (
     ParityStore,
     RecoveryError,
@@ -19,32 +32,36 @@ from repro.elastic.redundancy import (
     survivors_for,
 )
 from repro.elastic.scheduler import (
-    DeadlineEstimator,
     ElasticScheduler,
     EventOutcome,
-    PrefetchPolicy,
-    ReconfigEstimate,
     ScheduleReport,
     choose_mode,
 )
 from repro.elastic.trace import events_from_trace
 
 __all__ = [
+    "ControllerEndpoint",
     "DeadlineEstimator",
     "ElasticScheduler",
+    "Endpoint",
     "EventOutcome",
     "FaultInjector",
     "InjectionReport",
     "ParityStore",
     "PrefetchPolicy",
     "ReconfigEstimate",
+    "RecordView",
     "RecoveryError",
     "RedundancyMap",
     "ScheduleReport",
+    "ServeEndpoint",
+    "SimEndpoint",
+    "WireEndpoint",
+    "as_endpoint",
     "balance_donors",
     "choose_mode",
     "controller_phase",
     "events_from_trace",
-    "heal_plan",
     "survivors_for",
+    "heal_plan",
 ]

@@ -1,14 +1,17 @@
-"""Deadline-aware elasticity scheduler over the live controller (DESIGN.md
-§10; paper §2.3 event streams, §4.1 warning windows).
+"""Deadline-aware elasticity scheduler over a control-plane endpoint
+(DESIGN.md §10, §17; paper §2.3 event streams, §4.1 warning windows).
 
 The paper's volatility numbers assume every event lands inside its warning
-window; this module is the event loop that makes that true on the *real*
-``LiveRController`` rather than the analytic simulator. For each event it
+window; this module is the event loop that makes that true. It used to
+call ``LiveRController`` methods directly — it now speaks ONLY the typed
+protocol of ``elastic/protocol.py`` against an ``elastic/endpoint.py``
+endpoint, so the same loop drives a live controller, a serving
+controller, or a calibrated DES model, locally or (eventually) across a
+real transport. For each event it
 
   1. estimates trigger-to-safe time for each rung of the fallback lattice
-     (overlapped streaming -> stop-copy -> durable checkpoint) from the
-     intersection plan's byte counts and the recent ``ReconfigRecord``
-     history,
+     (overlapped streaming -> stop-copy -> peer-recovery -> durable
+     checkpoint) via ``query_estimate`` (or a driver-side estimator),
   2. picks the highest rung whose estimate (x safety margin) fits the
      warning window,
   3. coalesces duplicate events and retargets the in-flight reconfiguration
@@ -18,11 +21,12 @@ window; this module is the event loop that makes that true on the *real*
   4. escalates mid-stream to stop-copy (``escalate_commit``) when the
      remaining window no longer covers the pre-copy schedule.
 
-Trace times run on a *virtual clock*: ``clock += wall_dt * time_scale``, so
-a compressed trace replays in CI while deadline arithmetic stays in trace
-units. Measured goodput comes from the controller's ``GoodputLedger`` —
-real pauses, not modeled ones — which ``benchmarks/bench_goodput.py``
-reports next to the analytic ``sim.liver_sim.volatility_run`` prediction.
+Trace times run on a *virtual clock*: ``clock += wall_dt * time_scale``
+against live endpoints; endpoints that own a simulated clock report it in
+``StepResult.clock_s`` and the trace clock follows that instead. Measured
+goodput comes from the endpoint's ``query_ledger`` — real pauses, not
+modeled ones — which ``benchmarks/bench_goodput.py`` reports next to the
+analytic ``sim.liver_sim.volatility_run`` prediction.
 """
 
 from __future__ import annotations
@@ -32,71 +36,23 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable, Optional
 
-from repro.core.errors import RecoveryError
+from repro.core.errors import ProtocolError
 from repro.core.events import FailStopEvent, ResizeEvent, sort_trace
 from repro.core.records import ReuseRecordMixin
+from repro.elastic import protocol as p
+from repro.elastic.endpoint import (
+    DeadlineEstimator,
+    Endpoint,
+    PrefetchPolicy,
+    as_endpoint,
+)
+from repro.elastic.protocol import ErrorResponse, ReconfigEstimate, RecordView
 from repro.reshard.autotune import tune_operating_point
 
 
 # ---------------------------------------------------------------------------
-# Estimation + the fallback-lattice decision (pure; unit-testable)
+# The fallback-lattice decision (pure; unit-testable)
 # ---------------------------------------------------------------------------
-
-
-@dataclass(frozen=True)
-class ReconfigEstimate:
-    """Trigger-to-safe time estimates for one candidate reconfiguration.
-
-    All in real seconds; the scheduler converts with its ``time_scale``
-    before comparing to a (virtual-time) warning window.
-    """
-
-    prepare_s: float  # shadow build: mesh + lower + compile
-    precopy_s: float  # streaming rounds riding iteration boundaries
-    stream_pause_s: float  # commit pause of the overlapped path
-    stop_copy_pause_s: float  # whole transfer inside one pause
-    plan_bytes: int
-    rounds: int
-    step_s: float
-    # prepare_s is the WARM estimate: the controller's pool holds a ready
-    # world for the target, so Prepare skips lower+compile
-    warm: bool = False
-    # wire pricing (DESIGN.md §14): the pause estimates above are priced on
-    # wire_bytes (what crosses the interconnect under the controller's
-    # WirePolicy); lossless_transfer_s is what the same plan would cost
-    # uncompressed, so the scheduler can report which rung the event would
-    # have gotten without compression
-    wire_bytes: int = 0
-    layers: int = 0
-    lossless_transfer_s: float = 0.0
-    # peer_recover rung (DESIGN.md §15): True when the survivor set (plus
-    # fresh parity) covers the state, so an in-memory donor stream can
-    # replace the checkpoint round-trip; peer_pause_s prices that stream
-    # (warm/cold prepare + donor bytes at measured bandwidth, lossless —
-    # the recovery stream never compresses)
-    peer_ok: bool = False
-    peer_bytes: int = 0
-    peer_pause_s: float = 0.0
-
-    @property
-    def stream_total_s(self) -> float:
-        """Trigger -> committed via overlapped streaming."""
-        return self.prepare_s + self.precopy_s + self.stream_pause_s
-
-    @property
-    def stop_copy_total_s(self) -> float:
-        """Trigger -> committed via stop-copy (no boundary rounds)."""
-        return self.prepare_s + self.stop_copy_pause_s
-
-    @property
-    def stream_total_lossless_s(self) -> float:
-        """stream_total_s had the plan moved uncompressed."""
-        return self.prepare_s + self.precopy_s + self.lossless_transfer_s
-
-    @property
-    def stop_copy_total_lossless_s(self) -> float:
-        """stop_copy_total_s had the plan moved uncompressed."""
-        return self.prepare_s + self.lossless_transfer_s
 
 
 def choose_mode(
@@ -132,357 +88,6 @@ def choose_mode(
     if est.peer_ok:
         return "peer_recover"
     return "checkpoint"
-
-
-def _median(xs: list[float]) -> Optional[float]:
-    xs = sorted(x for x in xs if x > 0)
-    return xs[len(xs) // 2] if xs else None
-
-
-class DeadlineEstimator:
-    """prepare+stream estimates from plan metadata and reconfig history.
-
-    Bytes come from the same ``plan_state_transfer`` machinery that fills
-    the shadow world's ``plan_bundle`` (a ready bundle for the right target
-    is used as-is); seconds come from the recent ``ReconfigRecord``s —
-    median prepare time and effective transfer bandwidth — falling back to
-    the constructor defaults until history exists.
-    """
-
-    def __init__(
-        self,
-        controller,
-        default_prepare_s: float = 20.0,
-        default_warm_prepare_s: float = 1.0,
-        default_bw_bytes_s: float = 1e9,
-        default_step_s: float = 0.25,
-        history: int = 8,
-    ):
-        self.ctrl = controller
-        self.default_prepare_s = default_prepare_s
-        self.default_warm_prepare_s = default_warm_prepare_s
-        self.default_bw = default_bw_bytes_s
-        self.default_step_s = default_step_s
-        self.history = history
-
-    # -- history --------------------------------------------------------
-    def _recent(self, warm: Optional[bool] = None) -> list:
-        # every record whose Prepare actually completed is a valid sample,
-        # not just committed ones: after a retarget-heavy stretch the
-        # committed subset can be empty and a committed-only filter made
-        # the estimator silently fall back to its defaults. ``fell_back``
-        # on a live mode means an escalated commit (prepare finished);
-        # ``retargeted`` records count only when their prepare finished
-        # before supersession (prepare_s > 0 — mid-prepare retargets
-        # carry no timing).
-        recs = [
-            r
-            for r in self.ctrl.records
-            if r.mode in ("live", "live_overlap")
-            and (r.outcome in ("committed", "fell_back") or r.prepare_s > 0)
-        ]
-        if warm is not None:
-            if warm:
-                recs = [r for r in recs if getattr(r, "warm_hit", False)]
-            else:
-                # a speculative join measures neither a warm Prepare (the
-                # compile ran) nor a cold one (only the residual wait was
-                # timed) — sampling it as cold would drag the cold median
-                # toward zero and mis-rank the lattice for true cold events
-                recs = [
-                    r
-                    for r in recs
-                    if not getattr(r, "warm_hit", False)
-                    and getattr(r, "prepare_source", "cold")
-                    != "speculative_join"
-                ]
-        return recs[-self.history :]
-
-    def prepare_estimate(self, warm: bool = False) -> float:
-        """Median prepare time over recent records of the requested kind:
-        warm (pool hit — lower+compile skipped) and cold prepares differ by
-        orders of magnitude, so one blended median would make the lattice
-        reject the overlap rung exactly when a warm world makes it cheap."""
-        m = _median([r.prepare_s for r in self._recent(warm=warm)])
-        if m is not None:
-            return m
-        if warm:
-            # no warm history yet: a pool hit skips lower+compile, leaving
-            # planning + bookkeeping — bounded above by the cold estimate
-            return min(self.prepare_estimate(warm=False),
-                       self.default_warm_prepare_s)
-        # cold start: the gen-0 world's own build timings are the best proxy
-        t = self.ctrl.world.timings
-        seed = sum(t.get(k, 0.0) for k in ("mesh_s", "lower_s", "compile_s"))
-        return seed or self.default_prepare_s
-
-    def measured_bandwidth(self) -> Optional[float]:
-        """Median transfer bandwidth over recent records, or ``None`` with
-        no history yet (the operating-point tuner treats None as "fall back
-        to the hand-set constants").
-
-        With a wire policy on the controller, bandwidth is measured in
-        PHYSICAL wire bytes per second so that pricing ``est.wire_bytes``
-        and the lossless counterfactual against it stay on one scale;
-        lossless controllers keep the historical moved-bytes measure."""
-        compressed = getattr(self.ctrl, "wire_policy", None) is not None
-        bws = []
-        for r in self._recent():
-            moved = r.moved_bytes
-            if compressed:
-                moved = getattr(r, "wire_bytes", 0) or r.moved_bytes
-            secs = r.transfer_s + r.resync_s + r.precopy_s
-            if moved > 0 and secs > 0:
-                bws.append(moved / secs)
-        return _median(bws)
-
-    def bandwidth_estimate(self) -> float:
-        return self.measured_bandwidth() or self.default_bw
-
-    def step_estimate(self) -> float:
-        return _median(list(self.ctrl.iteration_times)[-16:]) or self.default_step_s
-
-    # -- the estimate ---------------------------------------------------
-    def _price_plan(self, plan) -> tuple[int, int, int]:
-        """(logical bytes, wire bytes, streaming layers) of a plan.
-
-        Priced on the classified plan IR (DESIGN.md §13): bytes are REMOTE
-        only — resident cells never move and local relayouts never cross a
-        wire — and fully-resident layers need no pre-copy rounds. This is
-        what lets a tp-preserving resize fit the overlap rung inside a
-        warning window its full-copy byte count would have blown. Wire
-        bytes price the same remote tasks under the controller's WirePolicy
-        (DESIGN.md §14); equal to logical bytes when lossless."""
-        from repro.reshard.wire import wire_nbytes
-
-        policy = getattr(self.ctrl, "wire_policy", None)
-        logical = plan.network_bytes
-        if policy is None:
-            wire = logical
-        else:
-            wire = sum(
-                wire_nbytes(policy, t)
-                for t in plan.tasks
-                if getattr(t, "kind", "remote") == "remote"
-            )
-        return logical, wire, len(plan.layers()) - len(plan.resident_layers())
-
-    def _plan_for(self, target) -> tuple[int, int, int]:
-        """(logical bytes, wire bytes, layers) for current-world -> target."""
-        b = getattr(self.ctrl, "_builder", None)
-        if b is not None and b.ready and not b.abandoned:
-            handle = b.result()
-            bundle = handle.plan_bundle
-            if (
-                handle.parallel == target
-                and bundle is not None
-                and bundle[0] == self.ctrl.world.parallel
-            ):
-                return self._price_plan(bundle[2])
-        from repro.core.reshard import plan_state_transfer
-
-        _, plan = plan_state_transfer(
-            self.ctrl.cfg, self.ctrl.world.parallel, target,
-            source_policy=self.ctrl.source_policy,
-        )
-        return self._price_plan(plan)
-
-    def _pool_warm(self, target) -> bool:
-        """True when the controller's warm pool holds a ready world for
-        ``target`` (Prepare will skip lower+compile)."""
-        pool = getattr(self.ctrl, "world_pool", None)
-        if pool is None or not hasattr(self.ctrl, "pool_key"):
-            return False
-        return pool.contains(self.ctrl.pool_key(target))
-
-    def estimate(self, target) -> ReconfigEstimate:
-        plan_bytes, wire_bytes, layers = self._plan_for(target)
-        bw = self.bandwidth_estimate()
-        step_s = self.step_estimate()
-        rounds = math.ceil(layers / max(1, self.ctrl.stream_k))
-        # the rungs are priced on what actually crosses the wire under the
-        # controller's WirePolicy; the lossless figure is kept alongside so
-        # the decision can be compared to its uncompressed counterfactual
-        transfer_s = wire_bytes / bw
-        warm = self._pool_warm(target)
-        # peer_recover rung pricing (DESIGN.md §15): coverage from the
-        # controller's survivor-constrained plan (fail-stop geometry — the
-        # ranks beyond the target prefix die), donor bytes at measured
-        # bandwidth, lossless (the recovery stream never compresses).
-        # Duck-typed controllers without peer recovery price it
-        # unavailable and keep the checkpoint rung.
-        peer_ok, peer_bytes = False, 0
-        cov = getattr(self.ctrl, "peer_coverage", None)
-        if cov is not None:
-            peer_ok, peer_bytes = cov(target)
-        return ReconfigEstimate(
-            prepare_s=self.prepare_estimate(warm=warm),
-            warm=warm,
-            # one pre-copy round per iteration boundary, each hiding its
-            # bytes under a training step (dispatch rides the boundary)
-            precopy_s=rounds * step_s,
-            # dense-optimizer worst case: every layer is dirty at commit,
-            # so the commit pause re-moves the plan (overlap.py's honest
-            # limit) — minus nothing we can promise in advance
-            stream_pause_s=transfer_s,
-            stop_copy_pause_s=transfer_s,
-            plan_bytes=plan_bytes,
-            rounds=rounds,
-            step_s=step_s,
-            wire_bytes=wire_bytes,
-            layers=layers,
-            lossless_transfer_s=plan_bytes / bw,
-            peer_ok=peer_ok,
-            peer_bytes=peer_bytes,
-            peer_pause_s=self.prepare_estimate(warm=warm) + peer_bytes / bw,
-        )
-
-
-# ---------------------------------------------------------------------------
-# Speculative warm-pool prefetch (DESIGN.md §12)
-# ---------------------------------------------------------------------------
-
-
-class PrefetchPolicy:
-    """Fills the controller's warm world pool while the event loop is idle.
-
-    Each ``tick`` (called by the scheduler on steps with no pending event)
-    asks the topology search for the likely next targets — the failover
-    standby (:func:`failover_target`, the prefix-survivor world a
-    fail-stop would recover into, DESIGN.md §15) first, then the best
-    feasible configurations at the walk-down/walk-up neighbor device
-    counts of the current world (:func:`likely_next_targets`) — and starts
-    speculative builds via ``controller.prefetch_world``. Targets already
-    pooled get their transfer executables pre-compiled instead
-    (``controller.prewarm_transfer``), so a recovery into a warm world
-    pays neither the Prepare nor the first-pair reshard compiles. The
-    controller enforces the guardrails: never while a real reconfiguration
-    is in flight, at most ``max_spec_builds`` concurrent compiles, skip
-    targets already pooled or building. Candidate enumeration is
-    re-planned per tick because the current world (and hence its
-    neighbors) changes with every commit; the search itself is
-    metadata-only and cheap.
-    """
-
-    def __init__(
-        self,
-        controller,
-        k: int = 2,
-        factors: tuple[float, ...] = (0.5, 2.0),
-        max_pp: int = 8,
-    ):
-        self.ctrl = controller
-        self.k = k
-        self.factors = factors
-        # must cover the pp range of the event stream's own targets (e.g.
-        # events_from_trace's max_pp) or a prefetched pp=1 world can never
-        # match a pp>1 event's pool key — wasted builds that evict genuinely
-        # useful entries. Pass the same bound you give the trace mapper.
-        self.max_pp = max_pp
-        self.started = 0
-        # candidates only change when the active world does (a commit);
-        # cache them so idle ticks don't re-run the topology search
-        self._cands_for = None
-        self._cands: list = []
-
-    def candidates(self) -> list:
-        from repro.core.topology_search import (
-            failover_target,
-            likely_next_targets,
-        )
-
-        ctrl = self.ctrl
-        cands = likely_next_targets(
-            ctrl.cfg,
-            ctrl.world.parallel,
-            len(ctrl.devices),
-            ctrl.global_batch,
-            ctrl.seq_len,
-            k=self.k,
-            factors=self.factors,
-            max_pp=self.max_pp,
-        )
-        # failover standbys (DESIGN.md §15): the prefix-survivor worlds an
-        # unannounced fail-stop would recover into, chained one level (a
-        # failure can take more than one replica group). Keeping them warm
-        # ahead of the walk-down/walk-up guesses bounds the fail-stop
-        # pause to the transfer itself, never a cold Prepare — except a
-        # world_size-1 standby, which protects only against losing all but
-        # one device: it queues BEHIND the walk candidates so it cannot
-        # hog the single speculative-build slot right before a walk-up.
-        front: list = []
-        back: list = []
-        cur = ctrl.world.parallel
-        for _ in range(2):
-            cur = failover_target(
-                ctrl.cfg, cur, ctrl.global_batch, max_pp=self.max_pp
-            )
-            if cur is None or cur == ctrl.world.parallel:
-                break
-            (front if cur.world_size > 1 else back).append(cur)
-        seen = set(front) | set(back)
-        return front + [c for c in cands if c not in seen] + back
-
-    def tick(self) -> int:
-        """Start speculative builds for the current candidates; returns
-        how many were started (0 when pooled/building/busy)."""
-        if getattr(self.ctrl, "reconfig_pending", False):
-            # builds would be refused mid-resize, but the INCOMING world's
-            # failover pairs can (and should) warm now: a window-0 event
-            # right after the commit pays any cold transfer compile inside
-            # its pause, and the post-commit gap is shorter than a compile
-            getattr(self.ctrl, "prewarm_failover_ahead", lambda: 0)()
-            return 0
-        current = self.ctrl.world.parallel
-        # warm transfer pairs into already-pooled worlds FIRST: a window-0
-        # recovery pays any cold transfer compile inside its pause, while
-        # a standby world build overlaps training — the prewarm is
-        # pause-critical, the build is not. (pool_key index 1 is the
-        # ParallelConfig; keys built for another device fingerprint
-        # peek-miss inside prewarm_transfer)
-        pool = getattr(self.ctrl, "world_pool", None)
-        if pool is not None:
-            # only non-growing pairs: the zero-warning consumers of these
-            # executables are fail-stops, shrinks and same-size
-            # retopologies — grows come with warning windows and stream,
-            # so warming them here would spend the compile budget the
-            # standby build needs. Nearest-size first: a same-size
-            # retopology has zero capacity slack and is the likeliest
-            # window-0 target, deeper-shrink pairs only matter after
-            # deeper failures (prewarms run one at a time, so order is
-            # priority)
-            keys = sorted(
-                (
-                    k
-                    for k in pool.keys()
-                    if k[1] != current
-                    and k[1].world_size <= current.world_size
-                ),
-                key=lambda k: current.world_size - k[1].world_size,
-            )
-            for key in keys:
-                self.ctrl.prewarm_transfer(key[1])
-        # while a prewarm is compiling, hold off on starting new cold
-        # builds — two concurrent XLA compiles contend for the same host
-        # cores and both slow down, and only the prewarm is on the
-        # recovery-pause path
-        thread = getattr(self.ctrl, "_prewarm_thread", None)
-        if thread is not None and thread.is_alive():
-            return 0
-        if current != self._cands_for:
-            self._cands_for = current
-            self._cands = self.candidates()
-        started = 0
-        for target in self._cands:
-            if self.ctrl.prefetch_world(target):
-                started += 1
-            else:
-                # already pooled (or building): warm the TRANSFER
-                # executables for (current → target) too, so a recovery
-                # into this world pays neither compile (DESIGN.md §15)
-                self.ctrl.prewarm_transfer(target)
-        self.started += started
-        return started
 
 
 # ---------------------------------------------------------------------------
@@ -574,13 +179,23 @@ class ScheduleReport:
 
 
 class ElasticScheduler:
-    """Replays an elasticity-event trace against a live controller.
+    """Replays an elasticity-event trace against a control-plane endpoint.
+
+    Accepts either an :class:`~repro.elastic.endpoint.Endpoint` or a bare
+    controller (auto-wrapped in a :class:`ControllerEndpoint`). Every
+    interaction with the job is a protocol message — this class holds no
+    reference to the controller and never touches its attributes, which
+    is what lets the fleet arbiter swap in serialized transports and
+    simulated jobs.
 
     ``time_scale`` converts wall seconds into virtual trace seconds
     (``clock += dt * time_scale``); estimates are scaled the same way before
     deadline comparisons. ``sync_prepare`` blocks on shadow builds so replay
     is step-deterministic (parity tests / ``--check`` gates); the default
     keeps Prepare fully overlapped with training, as in the paper.
+    ``estimator`` keeps rung decisions driver-side (a calibrated
+    :class:`DeadlineEstimator` or a test stub); without one the scheduler
+    asks the endpoint via ``query_estimate``.
     """
 
     def __init__(
@@ -595,33 +210,51 @@ class ElasticScheduler:
         max_steps: int = 5000,
         on_event: Optional[Callable[[EventOutcome], None]] = None,
         prefetch_k: int = 0,
-        prefetch: Optional["PrefetchPolicy"] = None,
+        prefetch: Optional[PrefetchPolicy] = None,
     ):
-        self.ctrl = controller
+        self.endpoint: Endpoint = as_endpoint(
+            controller, prefetch=prefetch, prefetch_k=prefetch_k
+        )
         self.time_scale = time_scale
         self.safety = safety
-        self.estimator = estimator or DeadlineEstimator(controller)
+        self.estimator = estimator
         self.sync_prepare = sync_prepare
         self.mode_override = mode_override
         self.tail_steps = tail_steps
         self.max_steps = max_steps
         self.on_event = on_event
-        # speculative warm-pool prefetch: a fully-configured policy takes
-        # precedence (set its max_pp to the trace mapper's!); prefetch_k is
-        # the default-config convenience. Either way only when the
-        # controller actually carries a pool.
-        self.prefetch: Optional[PrefetchPolicy] = prefetch
-        if (
-            self.prefetch is None
-            and prefetch_k > 0
-            and getattr(controller, "world_pool", None) is not None
-        ):
-            self.prefetch = PrefetchPolicy(controller, k=prefetch_k)
+        # speculative warm-pool prefetch runs endpoint-side; the scheduler
+        # only decides WHEN to tick (idle steps / mid-reconfig stream-ahead)
+        self._prefetch_enabled = (
+            getattr(self.endpoint, "prefetch", None) is not None
+        )
         self.clock = 0.0
         self.total_steps = 0
         self.outcomes: list[EventOutcome] = []
         self._pending: Optional[_Pending] = None
-        self._seen = len(controller.records)
+        self._seen = self._status().records
+
+    # -- protocol plumbing ----------------------------------------------
+    def _send(self, cmd, allow_error: bool = False):
+        resp = self.endpoint.handle(cmd)
+        if isinstance(resp, ErrorResponse) and not allow_error:
+            raise ProtocolError(
+                f"{type(cmd).__name__} -> {resp.kind}: {resp.message}"
+            )
+        return resp
+
+    def _status(self) -> p.StatusResponse:
+        return self._send(p.QueryStatus())
+
+    def _estimate(self, target) -> ReconfigEstimate:
+        if self.estimator is not None:
+            return self.estimator.estimate(target)
+        return self._send(p.QueryEstimate(target=target)).estimate
+
+    @property
+    def prefetch(self):
+        """The endpoint-side prefetch policy (bench/report convenience)."""
+        return getattr(self.endpoint, "prefetch", None)
 
     # -- clock ----------------------------------------------------------
     def _clocked(self, fn):
@@ -636,13 +269,18 @@ class ElasticScheduler:
                 f"scheduler exceeded max_steps={self.max_steps} "
                 "(runaway trace or a reconfiguration that never commits)"
             )
-        self._clocked(lambda: self.ctrl.train_steps(1))
+        t0 = time.perf_counter()
+        resp = self._send(p.TrainSteps(n=1))
+        if resp.clock_s >= 0.0:
+            # the endpoint owns a (simulated) clock: trace time follows it
+            self.clock = max(self.clock, resp.clock_s)
+        else:
+            self.clock += (time.perf_counter() - t0) * self.time_scale
         self.total_steps += 1
         self._absorb()
         self._enforce_deadline()
-        if self.prefetch is not None and (
-            self._pending is None
-            or getattr(self.ctrl, "reconfig_pending", False)
+        if self._prefetch_enabled and (
+            self._pending is None or self._status().reconfig_pending
         ):
             # idle between events: warm the pool for the likely next
             # targets (speculative build threads; never during a real
@@ -651,7 +289,7 @@ class ElasticScheduler:
             # prewarms the INCOMING world's failover pairs — that window
             # is exactly when those pairs must compile for a window-0
             # event right after the commit to find them warm
-            self.prefetch.tick()
+            self._send(p.PrefetchTick())
 
     def _advance_to(self, t: float) -> None:
         while self.clock < t:
@@ -660,22 +298,21 @@ class ElasticScheduler:
 
     # -- record bookkeeping ---------------------------------------------
     def _absorb(self) -> None:
-        """Match freshly-appended ReconfigRecords to the pending event."""
-        recs = self.ctrl.records
-        while self._seen < len(recs):
-            rec = recs[self._seen]
-            self._seen += 1
-            p = self._pending
+        """Match freshly-appended reconfig records to the pending event."""
+        resp = self._send(p.QueryRecords(since=self._seen))
+        self._seen = resp.total
+        for rec in resp.records:
+            pend = self._pending
             if (
-                p is not None
-                and rec.gen_id == p.gen_id
+                pend is not None
+                and rec.gen_id == pend.gen_id
                 and rec.outcome != "retargeted"
             ):
-                o = p.outcome
+                o = pend.outcome
                 o.outcome = rec.outcome
                 o.mode = rec.mode
                 o.commit_clock_s = self.clock
-                o.met_deadline = self.clock <= p.deadline
+                o.met_deadline = self.clock <= pend.deadline
                 o.reused_layers = rec.reused_layers
                 o.resident_layers = rec.resident_layers
                 o.skipped_bytes = rec.skipped_bytes
@@ -687,29 +324,35 @@ class ElasticScheduler:
                 o.pause_s = rec.total_pause_s
                 self._pending = None
 
+    def _skip_records(self) -> None:
+        """Fast-forward the absorb cursor past records the scheduler has
+        already accounted for through a direct command's response."""
+        self._seen = self._status().records
+
     def _enforce_deadline(self) -> None:
         """Escalate down the lattice when the window stops covering the
         remaining schedule (graceful degradation, paper §4.1)."""
-        p = self._pending
-        if p is None:
+        pend = self._pending
+        if pend is None:
             return
         margin = (
             self.safety
-            * (p.est.stop_copy_pause_s + p.est.step_s)
+            * (pend.est.stop_copy_pause_s + pend.est.step_s)
             * self.time_scale
         )
-        if p.mode == "stream" and self.clock >= p.deadline - margin:
-            if self._clocked(self.ctrl.escalate_commit) is not None:
+        if pend.mode == "stream" and self.clock >= pend.deadline - margin:
+            resp = self._clocked(lambda: self._send(p.EscalateCommit()))
+            if resp.escalated:
                 self._absorb()
                 return
-        if self.clock > p.deadline:
+        if self.clock > pend.deadline:
             # window missed with the shadow still building: drop down the
             # lattice — peer_recover when coverage holds, else checkpoint
-            if p.est.peer_ok or self.ctrl.ckpt_dir:
-                self.ctrl.cancel_resize(outcome="aborted")
-                self._restore(p.target, p.outcome, save_first=True)
-                p.outcome.met_deadline = False
-                self._seen = len(self.ctrl.records)
+            if pend.est.peer_ok or self._status().durable:
+                self._send(p.CancelResize(outcome="aborted"))
+                self._restore(pend.target, pend.outcome, save_first=True)
+                pend.outcome.met_deadline = False
+                self._skip_records()
                 self._pending = None
             # else: keep trying — the reconfig will land late (met_deadline
             # False) but the run survives; aborting gains nothing
@@ -718,15 +361,15 @@ class ElasticScheduler:
     def _restore(self, target, o: EventOutcome, save_first: bool) -> None:
         """Below-stop-copy rungs for a *warned* event past its window:
         durable save inside the window (belt, when a ckpt_dir exists),
-        then recover — the controller streams from peers when they cover
+        then recover — the endpoint streams from peers when they cover
         the state and demotes to the checkpoint restore itself.
 
         ``save_first`` doubles as the device-health signal: a warned event
         saves inside the window and its devices are fine (warm worlds stay
         valid); an unannounced fail-stop cannot save and its devices are
         suspect (``devices_failed`` purges overlapping pool entries)."""
-        if save_first and self.ctrl.ckpt_dir:
-            self._clocked(self.ctrl.checkpoint_now)
+        if save_first and self._status().durable:
+            self._clocked(lambda: self._send(p.CheckpointNow()))
         self._recover(target, o, devices_failed=not save_first)
 
     def _recover(
@@ -741,27 +384,34 @@ class ElasticScheduler:
         For a warned event (``devices_failed=False``) the lost set is the
         prefix-allocation complement of the target — the same geometry the
         estimator priced — so the donor stream never reads a rank that is
-        about to vanish. The controller internally demotes to the durable
-        checkpoint when peers + parity cannot cover the state, and raises
-        :class:`RecoveryError` when no rung is left (retired as
+        about to vanish. The endpoint internally demotes to the durable
+        checkpoint when peers + parity cannot cover the state, and answers
+        ``ErrorResponse("recovery")`` when no rung is left (retired as
         ``aborted``)."""
         if not devices_failed and not lost_ranks:
-            cur = self.ctrl.world.parallel.world_size
+            cur = self._status().world_size
             lost_ranks = tuple(range(target.world_size, cur))
-        try:
-            rec = self._clocked(
-                lambda: self.ctrl.fail_stop_recover(
-                    target,
+        resp = self._clocked(
+            lambda: self._send(
+                p.FailStopRecover(
+                    target=target,
                     devices_failed=devices_failed,
                     lost_ranks=tuple(lost_ranks),
-                )
+                ),
+                allow_error=True,
             )
-        except RecoveryError:
+        )
+        if isinstance(resp, ErrorResponse):
+            if resp.kind != "recovery":
+                raise ProtocolError(
+                    f"FailStopRecover -> {resp.kind}: {resp.message}"
+                )
             # no surviving replica, no fresh parity, no durable checkpoint:
             # the honest outcome is an abort
             o.decision = o.decision or "peer_recover"
             o.outcome = "aborted"
             return
+        rec: RecordView = resp.record
         o.decision = (
             "peer_recover" if rec.mode == "peer_recover" else "checkpoint"
         )
@@ -769,35 +419,36 @@ class ElasticScheduler:
         o.mode = rec.mode
         o.commit_clock_s = self.clock
         o.pause_s = rec.total_pause_s
-        self._seen = len(self.ctrl.records)
+        self._skip_records()
 
     # -- event handling ---------------------------------------------------
     def _handle_resize(self, ev: ResizeEvent, o: EventOutcome) -> None:
         target = ev.target
-        p = self._pending
+        pend = self._pending
         window = max(0.0, ev.deadline_s - self.clock)
         o.window_s = window
+        current = self._status().parallel
 
-        if p is not None and target == p.target:
+        if pend is not None and target == pend.target:
             # duplicate warning for the in-flight target: coalesce, keeping
             # the tighter deadline
             o.decision, o.outcome = "coalesce", "coalesced"
-            p.deadline = min(p.deadline, ev.deadline_s)
+            pend.deadline = min(pend.deadline, ev.deadline_s)
             return
-        if p is None and target == self.ctrl.world.parallel:
+        if pend is None and target == current:
             o.decision, o.outcome = "noop", "coalesced"  # already there
             return
-        if p is not None and target == self.ctrl.world.parallel:
+        if pend is not None and target == current:
             # the newer event returns to the CURRENT config: cancel the
             # in-flight reconfiguration outright (paper §7 stale target)
-            p.outcome.outcome = "retargeted"
-            self.ctrl.cancel_resize(outcome="retargeted")
-            self._seen = len(self.ctrl.records)
+            pend.outcome.outcome = "retargeted"
+            self._send(p.CancelResize(outcome="retargeted"))
+            self._skip_records()
             self._pending = None
             o.decision, o.outcome = "cancel", "committed"
             return
 
-        est = self.estimator.estimate(target)
+        est = self._estimate(target)
         o.est_stream_total_s = est.stream_total_s
         o.est_stop_copy_total_s = est.stop_copy_total_s
         mode = self.mode_override or choose_mode(
@@ -811,7 +462,10 @@ class ElasticScheduler:
         # tune the rung's operating point for this (plan, window) pair —
         # measured bandwidth only; a cold estimator yields the fallback
         # constants (source="fallback") and the controller keeps its own
-        bw = getattr(self.estimator, "measured_bandwidth", lambda: None)()
+        if self.estimator is not None:
+            bw = getattr(self.estimator, "measured_bandwidth", lambda: None)()
+        else:
+            bw = est.measured_bw or None
         op = tune_operating_point(
             est.wire_bytes,
             est.layers,
@@ -821,11 +475,11 @@ class ElasticScheduler:
         )
         o.operating_point = op.to_dict()
 
-        if p is not None:
+        if pend is not None:
             # a newer event supersedes the in-flight reconfiguration
-            p.outcome.outcome = "retargeted"
+            pend.outcome.outcome = "retargeted"
             if mode in ("checkpoint", "peer_recover"):
-                self.ctrl.cancel_resize(outcome="retargeted")
+                self._send(p.CancelResize(outcome="retargeted"))
                 self._pending = None
                 if mode == "peer_recover":
                     self._recover(target, o, devices_failed=False)
@@ -833,10 +487,13 @@ class ElasticScheduler:
                     self._restore(target, o, save_first=True)
                 return
             gen = self._clocked(
-                lambda: self.ctrl.retarget_resize(
-                    target, overlap=mode, operating_point=op
+                lambda: self._send(
+                    p.RetargetResize(
+                        target=target, overlap=mode,
+                        operating_point=op.to_dict(),
+                    )
                 )
-            )
+            ).gen_id
         elif mode == "peer_recover":
             # no pre-deadline work needed: the survivors keep the state in
             # memory — recover onto the target now, no disk round-trip
@@ -847,14 +504,17 @@ class ElasticScheduler:
             return
         else:
             gen = self._clocked(
-                lambda: self.ctrl.request_resize(
-                    target, overlap=mode, operating_point=op
+                lambda: self._send(
+                    p.RequestResize(
+                        target=target, overlap=mode,
+                        operating_point=op.to_dict(),
+                    )
                 )
-            )
+            ).gen_id
         if self.sync_prepare:
-            self.ctrl.wait_shadow_ready()
+            self._send(p.WaitShadowReady())
         o.gen_id = gen
-        self._seen = len(self.ctrl.records)
+        self._skip_records()
         self._pending = _Pending(
             outcome=o, target=target, gen_id=gen,
             deadline=ev.deadline_s, mode=mode, est=est,
@@ -866,41 +526,24 @@ class ElasticScheduler:
             # controller must drop its shadow too, or the orphaned build
             # commits later to a target the event stream already abandoned
             self._pending.outcome.outcome = "retargeted"
-            self.ctrl.cancel_resize(outcome="retargeted")
-            self._seen = len(self.ctrl.records)
+            self._send(p.CancelResize(outcome="retargeted"))
+            self._skip_records()
             self._pending = None
         target = ev.target
         if target is None:
-            target = self._survivor_target(ev)
+            target = self._send(
+                p.QuerySurvivorTarget(lost_ranks=tuple(ev.lost_ranks))
+            ).target
             if target is None:
                 o.outcome = "aborted"  # no feasible surviving topology
                 return
         o.target = target.describe()
         # unannounced: no pre-deadline save — source the survivor world's
         # state from peer replicas (DESIGN.md §15); the durable checkpoint
-        # is the last-resort rung the controller demotes to on its own
+        # is the last-resort rung the endpoint demotes to on its own
         self._recover(
             target, o, devices_failed=True, lost_ranks=tuple(ev.lost_ranks)
         )
-
-    def _survivor_target(self, ev: FailStopEvent):
-        """Largest feasible topology over the surviving devices: the naive
-        ``world - lost`` count is usually infeasible (divisibility), so walk
-        down until the search finds one."""
-        from repro.core.topology_search import best_target
-
-        survivors = max(
-            1, self.ctrl.world.parallel.world_size - max(1, len(ev.lost_ranks))
-        )
-        for world in range(survivors, 0, -1):
-            try:
-                return best_target(
-                    self.ctrl.cfg, world, self.ctrl.global_batch,
-                    self.ctrl.seq_len, max_pp=1,
-                )
-            except ValueError:
-                continue
-        return None
 
     def _handle(self, ev) -> None:
         o = EventOutcome(
@@ -928,10 +571,10 @@ class ElasticScheduler:
         while self._pending is not None:
             self._step()
         for _ in range(self.tail_steps):
-            self._clocked(lambda: self.ctrl.train_steps(1))
+            self._clocked(lambda: self._send(p.TrainSteps(n=1)))
             self.total_steps += 1
         self._absorb()
-        ledger = self.ctrl.ledger
+        ledger = self._send(p.QueryLedger())
         return ScheduleReport(
             outcomes=self.outcomes,
             steps=self.total_steps,

@@ -9,10 +9,50 @@ paper defers (§2.3(D)).
 
 from __future__ import annotations
 
+import math
 from typing import Iterable, Sequence
 
 from repro.configs.base import ModelConfig
+from repro.core.errors import TraceError
 from repro.core.events import FailStopEvent, ResizeEvent
+
+# the kinds the scheduler understands (core/events.py): every warned
+# shape change replays as a ResizeEvent, unannounced losses as FailStopEvent
+VALID_KINDS = ("resize", "scale_out", "scale_in", "preempt", "fail_stop")
+
+
+def _validate_row(i: int, row: Sequence) -> None:
+    """Typed errors at load time (TraceError, core/errors.py): a malformed
+    row used to surface mid-replay as an opaque topology-search or heap
+    error — long after the bad generator wrote it."""
+    if len(row) < 2:
+        raise TraceError(f"trace row {i}: need at least (t, world), got {row!r}")
+    t, world = row[0], row[1]
+    if not isinstance(t, (int, float)) or not math.isfinite(float(t)) or t < 0:
+        raise TraceError(f"trace row {i}: bad timestamp {t!r}")
+    if not isinstance(world, (int, float)) or int(world) != world or world <= 0:
+        raise TraceError(f"trace row {i}: world must be a positive int, got {world!r}")
+    if len(row) > 2 and row[2] not in VALID_KINDS:
+        raise TraceError(
+            f"trace row {i}: unknown event kind {row[2]!r} "
+            f"(expected one of {VALID_KINDS})"
+        )
+    if len(row) > 3:
+        w = row[3]
+        # inf is fine (an unhurried resize); negative or NaN is not
+        if not isinstance(w, (int, float)) or math.isnan(float(w)) or w < 0:
+            raise TraceError(f"trace row {i}: bad warning window {w!r}")
+    if len(row) > 4:
+        if row[2] != "fail_stop":
+            raise TraceError(
+                f"trace row {i}: lost_ranks only valid on fail_stop rows"
+            )
+        try:
+            lost = [int(r) for r in row[4]]
+        except (TypeError, ValueError):
+            raise TraceError(f"trace row {i}: bad lost_ranks {row[4]!r}") from None
+        if any(r < 0 for r in lost):
+            raise TraceError(f"trace row {i}: negative rank in {row[4]!r}")
 
 
 def events_from_trace(
@@ -35,13 +75,17 @@ def events_from_trace(
     warning window so a multi-hour trace replays against the live
     controller in seconds (a 24 h / 47-event trace at ``compress=3600``
     fires an event roughly every half-minute of wall clock).
+
+    Malformed rows raise :class:`~repro.core.errors.TraceError` up front —
+    unknown kind, non-positive world, negative/NaN warning, bad lost set.
     """
     from repro.core.topology_search import best_target
 
     assert compress > 0, compress
     events = []
     target_cache: dict[int, object] = {}
-    for row in trace:
+    for i, row in enumerate(trace):
+        _validate_row(i, row)
         t, world = float(row[0]), int(row[1])
         kind = row[2] if len(row) > 2 else "resize"
         warning = float(row[3]) if len(row) > 3 else default_warning_s

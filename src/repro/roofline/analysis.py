@@ -176,3 +176,70 @@ def roofline_terms(
         per_collective=per,
         model_flops=model_flops,
     )
+
+
+# ---------------------------------------------------------------------------
+# Analytic scaling curves (fleet arbitration value function, DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+# At the calibration point the collective term is a fixed fraction of the
+# step — the paper's measured DP overhead at full scale (§6.3's sub-1%
+# steady overhead excludes gradient sync; profile-level splits on the
+# testbed put allreduce near 15% of the iteration).
+_COLLECTIVE_FRACTION = 0.15
+
+
+def analytic_step_time(
+    params: float, world: int, cluster, ref_world: int = 32
+) -> float:
+    """Roofline-style step-time decomposition for a ``params``-sized job
+    on ``world`` devices of ``cluster`` (a ``sim.cluster.ClusterModel``).
+
+    The calibrated ``cluster.step_time_s`` at ``ref_world`` anchors the
+    magnitude; the split follows the roofline terms above: the compute
+    term shards perfectly (∝ 1/world) while the data-parallel gradient
+    all-reduce follows the ring cost ∝ (world-1)/world — asymptotically
+    FLAT in world. Throughput per device therefore *falls* as a job
+    grows, which is the concavity the fleet arbiter's marginal-value
+    function needs: past the knee, the next device is worth more to a
+    smaller job.
+    """
+    if world <= 0:
+        return float("inf")
+    base = cluster.step_time_s(params, ref_world, ref_world=ref_world)
+    comp_1dev = base * (1.0 - _COLLECTIVE_FRACTION) * ref_world
+    ring_coeff = base * _COLLECTIVE_FRACTION * ref_world / (ref_world - 1)
+    return comp_1dev / world + ring_coeff * (world - 1) / world
+
+
+def analytic_throughput(
+    params: float,
+    world: int,
+    cluster,
+    global_batch: int,
+    ref_world: int = 32,
+) -> float:
+    """Samples/second of the job at ``world`` devices (0 when idle)."""
+    if world <= 0:
+        return 0.0
+    return global_batch / analytic_step_time(params, world, cluster, ref_world)
+
+
+def marginal_throughput(
+    params: float,
+    world: int,
+    cluster,
+    global_batch: int,
+    delta: int = 1,
+    ref_world: int = 32,
+) -> float:
+    """Samples/second per *additional device* for growing ``world`` by
+    ``delta`` — the fleet arbiter's value function (strictly decreasing
+    in ``world`` under the ring model above)."""
+    if delta <= 0:
+        return 0.0
+    lo = analytic_throughput(params, world, cluster, global_batch, ref_world)
+    hi = analytic_throughput(
+        params, world + delta, cluster, global_batch, ref_world
+    )
+    return (hi - lo) / delta

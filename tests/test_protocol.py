@@ -1,0 +1,207 @@
+"""Control-plane wire protocol (DESIGN.md §17): every message type
+round-trips encode -> JSON -> decode bit-identically, the golden file
+freezes the v1 wire layout, and the versioning rule (additive = ignore
+unknown fields, breaking = reject newer versions) is enforced.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+
+import pytest
+
+from repro.configs.base import ParallelConfig
+from repro.core.controller import ReconfigRecord
+from repro.core.errors import ProtocolError
+from repro.elastic import protocol as p
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "protocol_v1.jsonl"
+
+
+# ---------------------------------------------------------------------------
+# Round-trip and canonical encoding
+# ---------------------------------------------------------------------------
+
+
+def test_every_message_round_trips_bit_identically():
+    msgs = p.golden_messages()
+    assert msgs, "golden corpus is empty"
+    for msg in msgs:
+        wire = p.dumps(msg)
+        back = p.loads(wire)
+        assert back == msg, f"{type(msg).__name__} changed across the wire"
+        assert type(back) is type(msg)
+        # canonical form is a fixed point: re-encoding is byte-identical
+        assert p.dumps(back) == wire
+
+
+def test_golden_corpus_covers_every_registered_type():
+    covered = {type(m) for m in p.golden_messages()}
+    registered = set(p._REGISTRY.values())
+    missing = {c.__name__ for c in registered - covered}
+    assert not missing, f"golden corpus misses wire types: {sorted(missing)}"
+
+
+def test_golden_file_matches_current_encoder():
+    """The committed golden file IS the v1 wire format. If this fails the
+    change is breaking: bump PROTOCOL_VERSION and freeze a new golden —
+    never regenerate over the old one (DESIGN.md §17 versioning rule)."""
+    assert GOLDEN.exists(), (
+        "regenerate with: PYTHONPATH=src python -m repro.elastic.protocol "
+        "tests/golden/protocol_v1.jsonl"
+    )
+    want = [p.dumps(m) for m in p.golden_messages()]
+    got = GOLDEN.read_text().splitlines()
+    assert got == want
+    # and every golden line decodes to a message that re-encodes to itself
+    for line in got:
+        assert p.dumps(p.loads(line)) == line
+
+
+def test_envelope_carries_version_and_type():
+    obj = p.encode(p.QueryStatus())
+    assert obj["v"] == p.PROTOCOL_VERSION
+    assert obj["type"] == "query_status"
+    # dumps is canonical: sorted keys, no whitespace
+    text = p.dumps(p.QueryStatus())
+    assert text == json.dumps(obj, sort_keys=True, separators=(",", ":"))
+
+
+def test_non_finite_floats_survive_json():
+    est = dataclasses.replace(_some_estimate(), precopy_s=float("inf"))
+    msg = p.EstimateResponse(estimate=est)
+    back = p.loads(p.dumps(msg))
+    assert back.estimate.precopy_s == float("inf")
+    # strict JSON: the wire text must not contain bare Infinity/NaN tokens
+    assert "Infinity" not in p.dumps(msg) and "NaN" not in p.dumps(msg)
+
+
+def _some_estimate():
+    return p.ReconfigEstimate(
+        prepare_s=1.0, precopy_s=2.0, stream_pause_s=0.5,
+        stop_copy_pause_s=1.5, plan_bytes=1 << 20, rounds=3, step_s=0.1,
+    )
+
+
+def test_parallel_config_round_trips_as_axis_dict():
+    msg = p.RequestResize(target=ParallelConfig(dp=2, pp=2, tp=4))
+    obj = p.encode(msg)
+    assert obj["target"] == {"dp": 2, "ep": 1, "pp": 2, "tp": 4}
+    back = p.decode(obj)
+    assert back.target == ParallelConfig(dp=2, pp=2, tp=4)
+    assert isinstance(back.target, ParallelConfig)
+
+
+# ---------------------------------------------------------------------------
+# Versioning rule
+# ---------------------------------------------------------------------------
+
+
+def test_newer_major_version_is_rejected():
+    obj = p.encode(p.QueryStatus())
+    obj["v"] = p.PROTOCOL_VERSION + 1
+    with pytest.raises(ProtocolError):
+        p.decode(obj)
+
+
+def test_unknown_fields_are_ignored_additive_evolution():
+    # an older decoder must accept messages from a newer additive peer
+    obj = p.encode(p.TrainSteps(n=7))
+    obj["some_future_field"] = {"nested": True}
+    assert p.decode(obj) == p.TrainSteps(n=7)
+
+
+def test_unknown_type_and_missing_fields_raise_typed_errors():
+    with pytest.raises(ProtocolError):
+        p.decode({"v": 1, "type": "no_such_verb"})
+    with pytest.raises(ProtocolError):
+        p.decode({"v": 1})  # no type tag at all
+    with pytest.raises(ProtocolError):
+        # required field (target has no default) absent
+        p.decode({"v": 1, "type": "request_resize"})
+    with pytest.raises(ProtocolError):
+        p.loads("not json at all {{{")
+
+
+def test_missing_optional_fields_take_defaults():
+    # a v1 peer that predates StepResult.clock_s still decodes
+    obj = p.encode(p.StepResult(steps=3))
+    del obj["clock_s"]
+    back = p.decode(obj)
+    assert back == p.StepResult(steps=3, clock_s=-1.0)
+
+
+# ---------------------------------------------------------------------------
+# ServeEndpoint: the serving controller behind the same protocol
+# ---------------------------------------------------------------------------
+
+
+class FakeServeController:
+    """Duck-typed LiveServeController surface the adapter touches."""
+
+    def __init__(self):
+        from types import SimpleNamespace
+
+        self.gen_id = 0
+        self.records = []
+        self.active = SimpleNamespace(parallel=ParallelConfig(dp=2, tp=2))
+        self._pending = None
+
+    def request_resize(self, target):
+        self._pending = target
+
+    def _discard_pending(self):
+        self._pending = None
+
+    @property
+    def resize_pending(self):
+        return self._pending is not None
+
+
+def test_serve_endpoint_answers_resize_subset_over_the_wire():
+    from repro.elastic import ServeEndpoint, WireEndpoint
+
+    ctrl = FakeServeController()
+    ep = WireEndpoint(ServeEndpoint(ctrl))
+    assert ep.kind == "serve"
+
+    r = ep.handle(p.RequestResize(target=ParallelConfig(dp=4)))
+    assert isinstance(r, p.ResizeStarted) and r.gen_id == 1
+    status = ep.handle(p.QueryStatus())
+    assert status.kind == "serve" and status.reconfig_pending
+    assert status.world_size == 4  # dp2 x tp2 active world
+
+    r = ep.handle(p.RetargetResize(target=ParallelConfig(dp=8)))
+    assert isinstance(r, p.ResizeStarted)
+    assert ctrl._pending == ParallelConfig(dp=8)
+
+    assert ep.handle(p.CancelResize()).ok
+    assert not ep.handle(p.QueryStatus()).reconfig_pending
+
+    recs = ep.handle(p.QueryRecords(since=0))
+    assert recs.total == 0 and recs.records == ()
+
+    # serving has no train loop: the verb is unsupported, not a crash
+    err = ep.handle(p.TrainSteps(n=1))
+    assert isinstance(err, p.ErrorResponse) and err.kind == "unsupported"
+
+
+# ---------------------------------------------------------------------------
+# RecordView bridge from the controller's native record type
+# ---------------------------------------------------------------------------
+
+
+def test_record_view_from_real_reconfig_record():
+    rec = ReconfigRecord(
+        gen_id=3, src="dp2", dst="dp4", mode="live_overlap",
+        outcome="committed", total_pause_s=0.25, reused_layers=5,
+    )
+    view = p.RecordView.from_record(rec)
+    assert (view.gen_id, view.src, view.dst) == (3, "dp2", "dp4")
+    assert view.outcome == "committed" and view.reused_layers == 5
+    assert view.total_pause_s == pytest.approx(0.25)
+    wrapped = p.RecordsResponse(records=(view,), total=1)
+    back = p.loads(p.dumps(wrapped))
+    assert back.records[0] == view

@@ -18,7 +18,13 @@ from repro.configs.base import ParallelConfig
 from repro.core.controller import ReconfigRecord
 from repro.core.downtime import GoodputLedger
 from repro.core.events import FailStopEvent, ResizeEvent, sort_trace
-from repro.elastic import ElasticScheduler, ReconfigEstimate, choose_mode
+from repro.elastic import (
+    ControllerEndpoint,
+    ElasticScheduler,
+    ReconfigEstimate,
+    WireEndpoint,
+    choose_mode,
+)
 
 
 # ---------------------------------------------------------------------------
@@ -91,6 +97,43 @@ def test_events_from_trace_compresses_times_and_windows():
     assert evs[0].warning_s == pytest.approx(1.0)
     assert evs[0].target.world_size == 4
     assert isinstance(evs[1], FailStopEvent) and evs[1].target.world_size == 8
+
+
+def test_events_from_trace_rejects_malformed_rows():
+    from repro.configs import get_config
+    from repro.core.errors import TraceError
+    from repro.elastic import events_from_trace
+
+    cfg = get_config("qwen3-1.7b").reduced()
+
+    def convert(rows):
+        return events_from_trace(rows, cfg, global_batch=8, seq_len=32)
+
+    ok = [(0.0, 4, "resize", 60.0)]
+    assert len(convert(ok)) == 1
+    bad = [
+        [(5.0,)],  # too short
+        [(-1.0, 4)],  # negative timestamp
+        [(float("nan"), 4)],  # non-finite timestamp
+        [("soon", 4)],  # non-numeric timestamp
+        [(0.0, 0)],  # non-positive world
+        [(0.0, 2.5)],  # fractional world
+        [(0.0, 4, "explode")],  # unknown kind
+        [(0.0, 4, "resize", -3.0)],  # negative warning
+        [(0.0, 4, "resize", float("nan"))],  # NaN warning
+        [(0.0, 4, "resize", 60.0, (1,))],  # lost_ranks on a non-failstop row
+        [(0.0, 4, "fail_stop", 0.0, 7)],  # uniterable lost_ranks
+        [(0.0, 4, "fail_stop", 0.0, (-1,))],  # negative rank
+    ]
+    for rows in bad:
+        with pytest.raises(TraceError):
+            convert(rows)
+    # inf warning is VALID: an unhurried resize
+    evs = convert([(0.0, 4, "resize", float("inf"))])
+    assert evs[0].warning_s == float("inf")
+    # the row index lands in the message for fast triage
+    with pytest.raises(TraceError, match="row 1"):
+        convert([(0.0, 4), (1.0, 0)])
 
 
 # ---------------------------------------------------------------------------
@@ -225,10 +268,37 @@ class FakeController:
 
 
 def _sched(ctrl, **kw):
+    # Protocol-level: the scheduler gets a WIRE endpoint, not the
+    # controller — every interaction below serializes through
+    # ``protocol.dumps``/``loads`` on both legs, so these tests prove the
+    # decision loop works over an RPC boundary, not via attribute access.
     kw.setdefault("estimator", StubEstimator(_est(prepare=0.001, precopy=0.001,
                                                   pause=0.001)))
     kw.setdefault("tail_steps", 1)
-    return ElasticScheduler(ctrl, **kw)
+    return ElasticScheduler(WireEndpoint(ControllerEndpoint(ctrl)), **kw)
+
+
+def test_scheduler_traffic_is_pure_protocol():
+    # every command and response of a full scheduler run crosses the wire
+    # codec, and the scheduler module itself never references a controller
+    ctrl = FakeController(steps_to_commit=3)
+    wire = WireEndpoint(ControllerEndpoint(ctrl))
+    rep = ElasticScheduler(
+        wire, estimator=StubEstimator(_est(prepare=0.001, precopy=0.001,
+                                           pause=0.001)), tail_steps=1
+    ).run([ResizeEvent(time_s=0.0, target=ParallelConfig(dp=4), warning_s=1e9)])
+    assert rep.outcomes[0].outcome == "committed"
+    assert wire.commands > 0 and wire.bytes_tx > 0 and wire.bytes_rx > 0
+
+    import inspect
+
+    import repro.elastic.scheduler as S
+
+    src = inspect.getsource(S)
+    for forbidden in ("self.controller", ".train_steps(", ".request_resize(",
+                      ".retarget_resize(", ".escalate_commit(",
+                      ".fail_stop_recover(", ".world.parallel"):
+        assert forbidden not in src, forbidden
 
 
 def test_coalesce_and_retarget_bookkeeping():
@@ -384,7 +454,8 @@ def test_deadline_escalation_falls_back_to_stop_copy():
         stop_copy_pause_s=0.001, plan_bytes=1 << 20, rounds=4, step_s=0.002,
     )
     rep = ElasticScheduler(
-        ctrl, estimator=StubEstimator(est), tail_steps=0, max_steps=500
+        WireEndpoint(ControllerEndpoint(ctrl)),
+        estimator=StubEstimator(est), tail_steps=0, max_steps=500,
     ).run([ResizeEvent(time_s=0.0, target=ParallelConfig(dp=4), warning_s=0.05)])
     o = rep.outcomes[0]
     assert o.decision == "stream"

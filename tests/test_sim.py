@@ -30,6 +30,47 @@ def test_des_ordering_and_determinism():
     assert sim.now == 2.0
 
 
+def test_des_ties_never_compare_payloads():
+    # equal timestamps force the heap to the tie-breaker; the monotonic
+    # sequence number must decide BEFORE Python ever compares the payloads
+    # (lambdas and dicts below are uncomparable: without the counter this
+    # raises TypeError from heapq)
+    sim = Simulator()
+    log = []
+    sim.schedule(1.0, lambda: log.append("first"))
+    sim.schedule(1.0, lambda: log.append("second"))
+    sim.schedule(1.0, log.append, {"payload": 3})  # dict arg, same instant
+    sim.schedule(0.0, lambda: log.append("zero"))
+    sim.run()
+    assert log == ["zero", "first", "second", {"payload": 3}]
+
+
+def test_des_tiebreak_is_fifo_at_scale():
+    # 100 same-instant events interleaved with other timestamps: strict
+    # submission order among equals, global time order overall
+    sim = Simulator()
+    log = []
+    for i in range(100):
+        sim.schedule(5.0, log.append, ("tie", i))
+    sim.schedule(4.0, log.append, "before")
+    sim.schedule(6.0, log.append, "after")
+    sim.run()
+    assert log[0] == "before" and log[-1] == "after"
+    assert log[1:-1] == [("tie", i) for i in range(100)]
+    assert sim.now == 6.0
+
+
+def test_des_run_until_does_not_advance_past_deadline():
+    sim = Simulator()
+    log = []
+    sim.schedule(1.0, log.append, "a")
+    sim.schedule(10.0, log.append, "late")
+    sim.run(until=5.0)
+    assert log == ["a"] and sim.now == 5.0
+    sim.run()  # the late event is still queued, not lost
+    assert log == ["a", "late"] and sim.now == 10.0
+
+
 def test_table1_breakdown_parity():
     d = reconfig_downtime(SystemKind.MEGATRON_CKPT, PAPER_TESTBED, 20e9, 32, 32)
     assert d.phases["ckpt_load"] == pytest.approx(54.6, abs=1.5)
